@@ -1,0 +1,118 @@
+"""Beyond-paper ablations of FedLesScan's components.
+
+The paper fixes τ=2 and always uses clustering+cooldown; here we isolate
+each mechanism's contribution under a 50%-straggler scenario:
+
+  * tau sweep (1, 2, 4)       — staleness window of Eq. 3
+  * no-clustering             — tier system + cooldown but random choice
+                                among participants (ablates DBSCAN)
+  * no-late-updates           — selection only; late updates discarded
+                                (ablates the semi-async store, §V-D)
+
+  PYTHONPATH=src python -m benchmarks.ablations
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.selection import select_random
+from repro.core.strategies import FedLesScan
+from repro.data import label_sorted_shards, make_image_classification
+from repro.data.synthetic import ArrayDataset
+from repro.fl.experiment import (ExperimentConfig, ScenarioConfig,
+                                 run_experiment)
+from repro.fl.tasks import ClassificationTask, TaskConfig
+from repro.models.small import make_cnn
+
+CACHE = Path(__file__).resolve().parent.parent / "results" / "ablations.json"
+
+
+class FedLesScanNoClustering(FedLesScan):
+    """Tier priority + cooldown + staleness aggregation, but participants
+    are drawn uniformly (no DBSCAN) — isolates the clustering benefit."""
+    name = "fedlesscan-nocluster"
+
+    def select(self, client_ids, round_number):
+        rookies, participants, stragglers = self.history.partition(client_ids)
+        need = self.config.clients_per_round
+        chosen = [r.client_id for r in rookies][:need]
+        pool = [p.client_id for p in participants]
+        if len(chosen) < need and pool:
+            take = min(need - len(chosen), len(pool))
+            chosen += list(self.rng.choice(pool, size=take, replace=False))
+        spool = [s.client_id for s in stragglers]
+        if len(chosen) < need and spool:
+            take = min(need - len(chosen), len(spool))
+            chosen += list(self.rng.choice(spool, size=take, replace=False))
+        return chosen
+
+
+class FedLesScanNoLate(FedLesScan):
+    """Clustering selection but stale updates are never aggregated."""
+    name = "fedlesscan-nolate"
+    semi_async = False
+
+    def aggregate(self, updates, round_number, now=None):
+        from repro.core.aggregation import staleness_aggregate
+        if not updates:
+            return None
+        return staleness_aggregate(list(updates), round_number,
+                                   tau=self.config.tau)
+
+
+def _setup(seed=0):
+    full = make_image_classification(2400, image_size=14, n_classes=5,
+                                     seed=seed)
+    train = ArrayDataset(full.x[:2000], full.y[:2000])
+    test = ArrayDataset(full.x[2000:], full.y[2000:])
+    parts = label_sorted_shards(train, 24, 2, seed=seed)
+    test_parts = label_sorted_shards(test, 24, 2, seed=seed)
+    task = ClassificationTask(
+        make_cnn(14, 1, 5, 64, "abl_cnn"),
+        TaskConfig(epochs=1, batch_size=32, per_sample_time_s=0.05))
+    return task, parts, test_parts
+
+
+def run_ablations(force: bool = False) -> dict:
+    if CACHE.exists() and not force:
+        return json.loads(CACHE.read_text())
+    from repro.core.strategies import STRATEGIES
+    STRATEGIES.setdefault("fedlesscan-nocluster", FedLesScanNoClustering)
+    STRATEGIES.setdefault("fedlesscan-nolate", FedLesScanNoLate)
+
+    task, parts, test_parts = _setup()
+    out = {}
+    cases = ([("fedlesscan", {"tau": t}) for t in (1, 2, 4)]
+             + [("fedlesscan-nocluster", {"tau": 2}),
+                ("fedlesscan-nolate", {"tau": 2})])
+    for strategy, overrides in cases:
+        cfg = ExperimentConfig(
+            strategy=strategy, n_rounds=14, clients_per_round=6,
+            eval_every=0, seed=0, tau=overrides.get("tau", 2),
+            scenario=ScenarioConfig(straggler_fraction=0.6,
+                                    slow_share=1.0, slow_factor=4.0,
+                                    slow_factor_jitter=3.0,
+                                    round_timeout_s=45.0, seed=0))
+        res = run_experiment(task, parts, test_parts, cfg)
+        key = f"{strategy}/tau={cfg.tau}"
+        out[key] = {"accuracy": res.final_accuracy, "eur": res.mean_eur,
+                    "duration_s": res.total_duration_s,
+                    "cost_usd": res.total_cost, "bias": res.bias}
+    CACHE.parent.mkdir(parents=True, exist_ok=True)
+    CACHE.write_text(json.dumps(out, indent=1))
+    return out
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for key, d in run_ablations().items():
+        print(f"ablation/{key},0.0,"
+              f"acc={d['accuracy']:.3f};eur={d['eur']:.2f};"
+              f"time_s={d['duration_s']:.0f};cost={d['cost_usd']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Shared experiment grid: strategies × straggler ratios (paper §VI).
+
+Tables II (accuracy/EUR), III (time) and IV (cost) all read from one grid
+of simulated-FaaS FL runs, exactly like the paper derives its tables from
+one set of experiments.  Results are cached to results/bench_grid.json.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.data import label_sorted_shards, make_image_classification
+from repro.data.synthetic import ArrayDataset
+from repro.fl.experiment import (ExperimentConfig, ScenarioConfig,
+                                 run_experiment)
+from repro.fl.tasks import ClassificationTask, TaskConfig
+from repro.models.small import make_cnn
+
+STRATEGIES = ("fedavg", "fedprox", "fedlesscan", "safa")
+RATIOS = (0.0, 0.1, 0.3, 0.5, 0.7)
+CACHE = Path(__file__).resolve().parent.parent / "results" / "bench_grid.json"
+
+N_CLIENTS = 24
+N_ROUNDS = 10
+CLIENTS_PER_ROUND = 6
+
+
+def _setup(seed: int = 0):
+    full = make_image_classification(2400, image_size=14, n_classes=5,
+                                     seed=seed)
+    train = ArrayDataset(full.x[:2000], full.y[:2000])
+    test = ArrayDataset(full.x[2000:], full.y[2000:])
+    parts = label_sorted_shards(train, N_CLIENTS, 2, seed=seed)
+    test_parts = label_sorted_shards(test, N_CLIENTS, 2, seed=seed)
+    model = make_cnn(14, 1, 5, 64, "bench_cnn")
+    task = ClassificationTask(
+        model, TaskConfig(epochs=1, batch_size=32, per_sample_time_s=0.05))
+    return task, parts, test_parts
+
+
+def run_grid(force: bool = False) -> dict:
+    if CACHE.exists() and not force:
+        return json.loads(CACHE.read_text())
+    task, parts, test_parts = _setup()
+    grid: dict = {}
+    for strategy in STRATEGIES:
+        for ratio in RATIOS:
+            cfg = ExperimentConfig(
+                strategy=strategy, n_rounds=N_ROUNDS,
+                clients_per_round=CLIENTS_PER_ROUND, eval_every=0, seed=0,
+                scenario=ScenarioConfig(straggler_fraction=ratio,
+                                        round_timeout_s=30.0, seed=0))
+            res = run_experiment(task, parts, test_parts, cfg)
+            key = f"{strategy}@{ratio}"
+            counts = res.invocation_counts()
+            grid[key] = {
+                "strategy": strategy, "ratio": ratio,
+                "accuracy": res.final_accuracy,
+                "eur": res.mean_eur,
+                "duration_s": res.total_duration_s,
+                "cost_usd": res.total_cost,
+                "bias": res.bias,
+                "invocations": sorted(counts.values()),
+                "round_durations": [r.duration_s for r in res.rounds],
+            }
+    CACHE.parent.mkdir(parents=True, exist_ok=True)
+    CACHE.write_text(json.dumps(grid, indent=1))
+    return grid

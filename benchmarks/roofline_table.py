@@ -1,0 +1,61 @@
+"""Render the §Roofline / §Dry-run markdown tables from results/dryrun/.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, variant: str = "baseline"):
+    rows = []
+    suffix = f"__{mesh}.json" if variant == "baseline" else \
+        f"__{mesh}__{variant}.json"
+    for f in sorted(RESULTS.glob(f"*{suffix}")):
+        stem = f.name[:-len(suffix)]
+        if variant == "baseline" and stem.count("__") != 1:
+            continue
+        rows.append(json.loads(f.read_text()))
+    rows.sort(key=lambda d: (d["arch"], SHAPE_ORDER.index(d["shape"])))
+    return rows
+
+
+def fmt(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    print(f"### Roofline — {args.mesh}-pod mesh, variant={args.variant}\n")
+    print("| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "dominant | useful ratio | per-dev args (GB) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in load(args.mesh, args.variant):
+        if d.get("status") == "skipped":
+            print(f"| {d['arch']} | {d['shape']} | — | — | — | "
+                  f"skipped (full attention @500k) | — | — |")
+            continue
+        if d.get("status") != "ok":
+            print(f"| {d['arch']} | {d['shape']} | — | — | — | "
+                  f"{d.get('status')} | — | — |")
+            continue
+        r = d["roofline"]
+        mem = d.get("memory_analysis", {})
+        args_gb = mem.get("argument_size_in_bytes", 0) / 1e9
+        print(f"| {d['arch']} | {d['shape']} | {fmt(r['compute_s'])} | "
+              f"{fmt(r['memory_s'])} | {fmt(r['collective_s'])} | "
+              f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+              f"{args_gb:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

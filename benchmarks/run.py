@@ -1,0 +1,162 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * bench_fig1        — FedAvg round duration & accuracy vs straggler %
+  * bench_table2      — accuracy + EUR per strategy × straggler ratio
+  * bench_table3      — experiment duration per strategy × ratio
+  * bench_table4      — cost per strategy × ratio
+  * bench_fig3c       — selection-bias distribution per strategy
+  * bench_kernels     — Pallas kernel µs/call vs jnp oracle µs/call
+  * bench_roofline    — dry-run roofline terms per (arch × shape) [cached]
+
+Run: ``PYTHONPATH=src python -m benchmarks.run``
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.fedless_grid import RATIOS, STRATEGIES, run_grid
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def _row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _time_call(fn, n: int = 5) -> float:
+    out = fn()  # warmup / compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------- fig 1
+def bench_fig1(grid: dict) -> None:
+    """Paper Fig. 1: FedAvg accuracy & mean round duration vs straggler %."""
+    for ratio in RATIOS:
+        g = grid[f"fedavg@{ratio}"]
+        mean_round = float(np.mean(g["round_durations"]))
+        _row(f"fig1/fedavg_stragglers_{int(ratio*100)}pct",
+             mean_round * 1e6,
+             f"acc={g['accuracy']:.3f};round_s={mean_round:.1f}")
+
+
+# ---------------------------------------------------------------- table 2
+def bench_table2(grid: dict) -> None:
+    for s in STRATEGIES:
+        for ratio in RATIOS:
+            g = grid[f"{s}@{ratio}"]
+            _row(f"table2/{s}_{int(ratio*100)}pct", 0.0,
+                 f"acc={g['accuracy']:.3f};eur={g['eur']:.2f}")
+
+
+# ---------------------------------------------------------------- table 3
+def bench_table3(grid: dict) -> None:
+    for s in STRATEGIES:
+        for ratio in RATIOS:
+            g = grid[f"{s}@{ratio}"]
+            _row(f"table3/{s}_{int(ratio*100)}pct", g["duration_s"] * 1e6,
+                 f"duration_s={g['duration_s']:.1f}")
+
+
+# ---------------------------------------------------------------- table 4
+def bench_table4(grid: dict) -> None:
+    for s in STRATEGIES:
+        for ratio in RATIOS:
+            g = grid[f"{s}@{ratio}"]
+            _row(f"table4/{s}_{int(ratio*100)}pct", 0.0,
+                 f"cost_usd={g['cost_usd']:.4f}")
+
+
+# ---------------------------------------------------------------- fig 3c
+def bench_fig3c(grid: dict) -> None:
+    """Selection bias: min/median/max invocations per client."""
+    for s in STRATEGIES:
+        g = grid[f"{s}@0.5"]
+        inv = g["invocations"]
+        _row(f"fig3c/{s}_50pct", 0.0,
+             f"bias={g['bias']};min={min(inv)};med={int(np.median(inv))};"
+             f"max={max(inv)}")
+
+
+# ---------------------------------------------------------------- kernels
+def bench_kernels() -> None:
+    from repro.kernels import fed_agg, flash_attention, ssd_scan
+    from repro.kernels.ref import fed_agg_ref, flash_attention_ref, ssd_ref
+    rng = np.random.default_rng(0)
+
+    u = jnp.asarray(rng.normal(size=(16, 1 << 16)), jnp.float32)
+    c = jnp.asarray(rng.random(16), jnp.float32)
+    us_k = _time_call(lambda: fed_agg(u, c))
+    us_r = _time_call(lambda: fed_agg_ref(u, c))
+    _row("kernels/fed_agg_16x65536", us_k, f"ref_us={us_r:.1f}")
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.float32)
+    us_k = _time_call(lambda: flash_attention(q, k, v, bq=128, bk=128))
+    us_r = _time_call(lambda: flash_attention_ref(q, k, v))
+    _row("kernels/flash_attention_512", us_k,
+         f"ref_us={us_r:.1f};interpret=True")
+
+    x = jnp.asarray(rng.normal(size=(1, 512, 4, 32)) * 0.5, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(size=(1, 512, 4))) * 0.3, jnp.float32)
+    B = jnp.asarray(rng.normal(size=(1, 512, 4, 16)) * 0.5, jnp.float32)
+    C = jnp.asarray(rng.normal(size=(1, 512, 4, 16)) * 0.5, jnp.float32)
+    us_k = _time_call(lambda: ssd_scan(x, a, B, C, chunk=128))
+    us_r = _time_call(lambda: ssd_ref(x, a, B, C))
+    _row("kernels/ssd_scan_512", us_k, f"ref_us={us_r:.1f};interpret=True")
+
+
+# ---------------------------------------------------------------- roofline
+def bench_roofline() -> None:
+    """Surface the dry-run roofline table (results/dryrun/*.json)."""
+    ddir = RESULTS / "dryrun"
+    if not ddir.exists():
+        _row("roofline/missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    for f in sorted(ddir.glob("*__single.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") != "ok":
+            _row(f"roofline/{d['arch']}__{d['shape']}", 0.0,
+                 f"status={d.get('status')}")
+            continue
+        r = d["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        _row(f"roofline/{d['arch']}__{d['shape']}", bound * 1e6,
+             f"dominant={r['dominant']};compute_s={r['compute_s']:.2e};"
+             f"memory_s={r['memory_s']:.2e};"
+             f"collective_s={r['collective_s']:.2e};"
+             f"useful={r['useful_flops_ratio']:.2f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    grid = run_grid()
+    bench_fig1(grid)
+    bench_table2(grid)
+    bench_table3(grid)
+    bench_table4(grid)
+    bench_fig3c(grid)
+    bench_kernels()
+    bench_roofline()
+    # beyond-paper: component ablations of FedLesScan
+    from benchmarks.ablations import run_ablations
+    for key, d in run_ablations().items():
+        _row(f"ablation/{key}", 0.0,
+             f"acc={d['accuracy']:.3f};eur={d['eur']:.2f};"
+             f"time_s={d['duration_s']:.0f};cost={d['cost_usd']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Pytree checkpointing (npz-based; no orbax in this environment).
+
+Flattens a pytree of arrays to path-keyed npz entries plus a JSON treedef
+descriptor; restores exactly.  Used by the FL parameter server (round-
+tagged global models) and the pretraining driver.
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+_SEP = "|"
+
+
+def _flatten_with_paths(tree: Pytree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return f"#{entry.idx}"
+    return str(entry)
+
+
+def save_pytree(tree: Pytree, path: str) -> None:
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    np.savez(p, **flat)
+
+
+def load_pytree(path: str, like: Pytree) -> Pytree:
+    """Restore into the structure of `like` (shape/dtype-checked)."""
+    data = np.load(path, allow_pickle=False)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, leaf in flat_like:
+        key = _SEP.join(_path_str(p) for p in kp)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Step-tagged checkpoints with retention. Files: <dir>/step_%08d.npz"""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    def save(self, tree: Pytree, step: int) -> Path:
+        path = self.dir / f"step_{step:08d}.npz"
+        save_pytree(tree, str(path))
+        self._gc()
+        return path
+
+    def latest_step(self) -> Optional[int]:
+        steps = sorted(self.steps())
+        return steps[-1] if steps else None
+
+    def steps(self):
+        out = []
+        for f in self.dir.glob("step_*.npz"):
+            m = re.match(r"step_(\d+)\.npz", f.name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def restore(self, like: Pytree, step: Optional[int] = None) -> Pytree:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return load_pytree(str(self.dir / f"step_{step:08d}.npz"), like)
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            (self.dir / f"step_{s:08d}.npz").unlink(missing_ok=True)

@@ -1,0 +1,21 @@
+"""FedLesScan core: client history, clustering, selection, aggregation."""
+from .aggregation import (ClientUpdate, RunningAggregator, UpdateStore,
+                          fedavg_aggregate,
+                          fedavg_coefficients, staleness_aggregate,
+                          staleness_coefficients)
+from .clustering import ClusteringResult, calinski_harabasz, cluster_clients, dbscan
+from .features import ema, feature_matrix, missed_round_ema, total_ema, training_ema
+from .history import ClientHistoryDB, ClientRecord
+from .selection import SelectionPlan, select_clients, select_random
+from .strategies import (STRATEGIES, FedAvg, FedLesScan, FedProx, Strategy,
+                         StrategyConfig, make_strategy)
+
+__all__ = [
+    "ClientUpdate", "RunningAggregator", "UpdateStore", "fedavg_aggregate", "fedavg_coefficients",
+    "staleness_aggregate", "staleness_coefficients", "ClusteringResult",
+    "calinski_harabasz", "cluster_clients", "dbscan", "ema", "feature_matrix",
+    "missed_round_ema", "total_ema", "training_ema", "ClientHistoryDB",
+    "ClientRecord", "SelectionPlan", "select_clients", "select_random",
+    "STRATEGIES", "FedAvg", "FedLesScan", "FedProx", "Strategy",
+    "StrategyConfig", "make_strategy",
+]

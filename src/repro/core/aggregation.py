@@ -1,0 +1,171 @@
+"""Aggregation schemes — FedAvg and the paper's staleness-aware Eq. 3.
+
+    w_{t+1} = Σ_k (t_k / t) · (n_k / n) · w^k_{t_k}
+
+where t is the current round, t_k the round client k's update was produced
+in, n_k the client dataset cardinality and n the total cardinality of the
+aggregated clients.  Updates with t − t_k ≥ τ are discarded (τ = 2 in the
+paper).  For t_k = t the scheme reduces exactly to FedAvg.
+
+Updates are JAX pytrees; the weighted sum is jit'd and distributable
+(pjit over the mesh) and has a Pallas kernel twin in kernels/fed_agg.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclass
+class ClientUpdate:
+    """One client's local model update as stored in the parameter server."""
+    client_id: str
+    params: Pytree
+    num_samples: int
+    round_number: int          # t_k — the round the update was trained for
+    training_time: float = 0.0
+
+
+@partial(jax.jit, static_argnums=())
+def _weighted_sum(stacked: Pytree, coeffs: jnp.ndarray) -> Pytree:
+    """Σ_k coeffs[k] · leaf[k] for every leaf of a stacked pytree."""
+    def one(leaf):
+        c = coeffs.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(c * leaf, axis=0)
+    return jax.tree_util.tree_map(one, stacked)
+
+
+def _stack(updates: Sequence[Pytree]) -> Pytree:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *updates)
+
+
+def fedavg_coefficients(updates: Sequence[ClientUpdate]) -> np.ndarray:
+    n = float(sum(u.num_samples for u in updates)) or 1.0
+    return np.array([u.num_samples / n for u in updates], dtype=np.float64)
+
+
+def staleness_coefficients(updates: Sequence[ClientUpdate],
+                           current_round: int) -> np.ndarray:
+    """Eq. 3 coefficients (t_k/t)·(n_k/n). Round numbers are 0-based in the
+    runtime, so the damping ratio uses (t_k+1)/(t+1)."""
+    n = float(sum(u.num_samples for u in updates)) or 1.0
+    t = float(current_round + 1)
+    return np.array(
+        [((u.round_number + 1) / t) * (u.num_samples / n) for u in updates],
+        dtype=np.float64)
+
+
+def aggregate(updates: Sequence[ClientUpdate],
+              coeffs: np.ndarray) -> Pytree:
+    stacked = _stack([u.params for u in updates])
+    return _weighted_sum(stacked, jnp.asarray(coeffs, dtype=jnp.float32))
+
+
+def fedavg_aggregate(updates: Sequence[ClientUpdate]) -> Pytree:
+    """Plain FedAvg: Σ (n_k/n) w_k."""
+    if not updates:
+        raise ValueError("fedavg_aggregate needs at least one update")
+    return aggregate(updates, fedavg_coefficients(updates))
+
+
+def staleness_aggregate(updates: Sequence[ClientUpdate], current_round: int,
+                        tau: int = 2) -> Optional[Pytree]:
+    """Paper Eq. 3 with max-age cutoff τ: drop updates with t − t_k ≥ τ.
+
+    Returns None when every update was discarded (caller keeps the old
+    global model for this round).
+    """
+    fresh = [u for u in updates if (current_round - u.round_number) < tau]
+    if not fresh:
+        return None
+    return aggregate(fresh, staleness_coefficients(fresh, current_round))
+
+
+class RunningAggregator:
+    """FedLess §III-A 'running average model aggregation': accumulate
+    updates one by one in O(1) memory instead of stacking all K.
+
+    Eq. 3 factorises as (Σ_k (t_k/t)·n_k·w_k) / (Σ_k n_k), so the server
+    can fold each update into a numerator/denominator pair as it arrives
+    — the production path when K × model-size doesn't fit the aggregator
+    function's memory (paper: 7 GB aggregation function limit).
+    """
+
+    def __init__(self, current_round: int, tau: int = 2):
+        self.current_round = current_round
+        self.tau = tau
+        self._num: Optional[Pytree] = None
+        self._den: float = 0.0
+        self.accepted = 0
+        self.rejected = 0
+
+    def add(self, update: ClientUpdate) -> bool:
+        """Fold one update in; returns False if discarded by τ."""
+        if (self.current_round - update.round_number) >= self.tau:
+            self.rejected += 1
+            return False
+        damp = (update.round_number + 1) / (self.current_round + 1)
+        scale = jnp.float32(damp * update.num_samples)
+
+        def fold(acc, leaf):
+            return acc + scale * leaf.astype(jnp.float32)
+
+        if self._num is None:
+            self._num = jax.tree_util.tree_map(
+                lambda l: scale * l.astype(jnp.float32), update.params)
+        else:
+            self._num = jax.tree_util.tree_map(fold, self._num,
+                                               update.params)
+        self._den += float(update.num_samples)
+        self.accepted += 1
+        return True
+
+    def finalize(self) -> Optional[Pytree]:
+        if self._num is None or self._den == 0.0:
+            return None
+        inv = jnp.float32(1.0 / self._den)
+        return jax.tree_util.tree_map(lambda l: l * inv, self._num)
+
+
+class UpdateStore:
+    """Parameter-server-side store of pending client updates.
+
+    Slow clients push updates after their round finished (semi-async);
+    those stale updates are *included the next time aggregation runs*
+    (paper §V-D) and dropped once older than τ.  Each update carries an
+    arrival time (the client's virtual finish time): an update is only
+    visible to aggregations that happen after it physically arrived —
+    very slow clients therefore age across multiple rounds and τ
+    genuinely discards them.
+    """
+
+    def __init__(self, tau: int = 2):
+        self.tau = tau
+        self._pending: List[tuple] = []   # (arrival_time, ClientUpdate)
+
+    def push(self, update: ClientUpdate,
+             arrival_time: float = 0.0) -> None:
+        self._pending.append((arrival_time, update))
+
+    def pop_for_round(self, current_round: int,
+                      now: Optional[float] = None) -> List[ClientUpdate]:
+        """Return fresh-enough *arrived* updates; keep future arrivals."""
+        taken, kept = [], []
+        for arrival, u in self._pending:
+            if now is not None and arrival > now:
+                kept.append((arrival, u))       # still in flight
+            elif (current_round - u.round_number) < self.tau:
+                taken.append(u)
+            # else: aged out — dropped (paper §V-D)
+        self._pending = kept
+        return taken
+
+    def __len__(self) -> int:
+        return len(self._pending)

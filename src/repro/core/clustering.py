@@ -1,0 +1,126 @@
+"""DBSCAN + Calinski–Harabasz, from scratch (no sklearn in this env).
+
+The paper (§V-C) clusters participant clients with DBSCAN on the 2-D
+feature matrix, grid-searches ε to maximise the Calinski–Harabasz index,
+and treats outliers as one extra cluster.  N ≤ a few thousand clients, so
+the O(N²) distance matrix is fine and deterministic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+NOISE = -1
+
+
+def dbscan(x: np.ndarray, eps: float, min_samples: int = 2) -> np.ndarray:
+    """Classic DBSCAN (Ester et al., 1996). Returns labels, -1 = noise.
+
+    Deterministic: points are visited in index order and BFS expansion uses
+    sorted neighbour lists.
+    """
+    n = x.shape[0]
+    labels = np.full(n, NOISE, dtype=np.int64)
+    if n == 0:
+        return labels
+    # pairwise euclidean distances
+    d2 = np.sum((x[:, None, :] - x[None, :, :]) ** 2, axis=-1)
+    neigh = d2 <= eps * eps  # includes self
+    core = neigh.sum(axis=1) >= min_samples
+
+    cluster = 0
+    for i in range(n):
+        if labels[i] != NOISE or not core[i]:
+            continue
+        # start a new cluster, expand via BFS over core points
+        labels[i] = cluster
+        frontier = [i]
+        while frontier:
+            p = frontier.pop()
+            for q in np.nonzero(neigh[p])[0]:
+                if labels[q] == NOISE:
+                    labels[q] = cluster
+                    if core[q]:
+                        frontier.append(int(q))
+        cluster += 1
+    return labels
+
+
+def calinski_harabasz(x: np.ndarray, labels: np.ndarray) -> float:
+    """Calinski–Harabasz index (variance-ratio criterion).
+
+    Ratio of between-cluster to within-cluster dispersion, scaled by
+    (N − k)/(k − 1).  Higher is better.  Returns -inf when undefined
+    (k < 2 or k == N).
+    """
+    uniq = np.unique(labels)
+    k = len(uniq)
+    n = x.shape[0]
+    if k < 2 or k >= n:
+        return float("-inf")
+    overall = x.mean(axis=0)
+    ssb = 0.0  # between-group dispersion
+    ssw = 0.0  # within-group dispersion
+    for lab in uniq:
+        pts = x[labels == lab]
+        mu = pts.mean(axis=0)
+        ssb += pts.shape[0] * float(np.sum((mu - overall) ** 2))
+        ssw += float(np.sum((pts - mu) ** 2))
+    if ssw <= 0.0:
+        return float("inf")
+    return (ssb / ssw) * ((n - k) / (k - 1.0))
+
+
+@dataclass
+class ClusteringResult:
+    labels: np.ndarray          # outliers folded into their own cluster id
+    eps: float
+    score: float
+    n_clusters: int
+
+
+def _fold_noise(labels: np.ndarray) -> np.ndarray:
+    """Paper: 'for simplicity, we treat outliers as a single cluster'."""
+    out = labels.copy()
+    if np.any(out == NOISE):
+        out[out == NOISE] = out.max() + 1
+    return out
+
+
+def cluster_clients(x: np.ndarray, eps_grid: Optional[Sequence[float]] = None,
+                    min_samples: int = 2) -> ClusteringResult:
+    """Grid-search ε for the best Calinski–Harabasz score (paper §V-C).
+
+    The ε grid defaults to quantiles of the pairwise-distance distribution,
+    which adapts to the current feature scale without extra passes.
+    """
+    n = x.shape[0]
+    if n == 0:
+        return ClusteringResult(np.zeros(0, np.int64), 0.0, 0.0, 0)
+    if n == 1:
+        return ClusteringResult(np.zeros(1, np.int64), 0.0, 0.0, 1)
+
+    if eps_grid is None:
+        d = np.sqrt(np.sum((x[:, None, :] - x[None, :, :]) ** 2, axis=-1))
+        pos = d[d > 0]
+        if pos.size == 0:  # all identical points → one cluster
+            return ClusteringResult(np.zeros(n, np.int64), 0.0, 0.0, 1)
+        eps_grid = np.unique(np.quantile(pos, np.linspace(0.05, 0.95, 13)))
+
+    best: Optional[ClusteringResult] = None
+    for eps in eps_grid:
+        if eps <= 0:
+            continue
+        labels = _fold_noise(dbscan(x, float(eps), min_samples))
+        score = calinski_harabasz(x, labels)
+        k = len(np.unique(labels))
+        cand = ClusteringResult(labels, float(eps), score, k)
+        if best is None or cand.score > best.score:
+            best = cand
+    if best is None or best.n_clusters < 2 or not np.isfinite(best.score):
+        # degenerate data (e.g. all behaviourally identical) → one cluster
+        labels = np.zeros(n, np.int64)
+        return ClusteringResult(labels, float(eps_grid[-1]), 0.0, 1)
+    return best

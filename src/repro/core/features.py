@@ -1,0 +1,74 @@
+"""Clustering features — paper §V-C.
+
+trainingEma      : EMA over the client's recorded training times; a weighted
+                   average that gives higher weight to recent rounds.
+missedRoundEma   : EMA over (missed_round / current_round) ratios — recent
+                   misses penalise more, and a given miss decays as training
+                   progresses (the denominator grows).
+totalEma (Eq. 2) : trainingEma + missedRoundEma * maxTrainingTime.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .history import ClientRecord
+
+
+def ema(values: Sequence[float], alpha: float = 0.5) -> float:
+    """Exponential moving average, most-recent-last.
+
+    alpha is the smoothing factor applied to the newest observation; the
+    paper uses an (unspecified-parameter) EMA, we default to 0.5 which
+    half-lives one round.
+    """
+    if len(values) == 0:
+        return 0.0
+    acc = float(values[0])
+    for v in values[1:]:
+        acc = alpha * float(v) + (1.0 - alpha) * acc
+    return acc
+
+
+def training_ema(rec: ClientRecord, alpha: float = 0.5) -> float:
+    return ema(rec.training_times, alpha)
+
+
+def missed_round_ema(rec: ClientRecord, current_round: int,
+                     alpha: float = 0.5) -> float:
+    """EMA over missed-round ratios (paper §V-C).
+
+    Each missed round number is divided by the current round number, so the
+    penalty of a specific miss decreases as training progresses.
+    """
+    if current_round <= 0 or not rec.missed_rounds:
+        return 0.0
+    ratios = [min(1.0, (m + 1) / (current_round + 1))
+              for m in sorted(rec.missed_rounds)]
+    return ema(ratios, alpha)
+
+
+def total_ema(rec: ClientRecord, current_round: int,
+              max_training_time: float, alpha: float = 0.5) -> float:
+    """Eq. 2: totalEma = trainingEma + missedRoundEma * maxTrainingTime."""
+    return (training_ema(rec, alpha)
+            + missed_round_ema(rec, current_round, alpha) * max_training_time)
+
+
+def feature_matrix(records: Sequence[ClientRecord], current_round: int,
+                   alpha: float = 0.5) -> np.ndarray:
+    """(N, 2) clustering features: [trainingEma, missedRoundEma·maxT].
+
+    maxTrainingTime is taken over the participating records (so the missed-
+    round penalty is commensurate with the training-time scale), matching
+    Eq. 2's scaling.
+    """
+    if not records:
+        return np.zeros((0, 2), dtype=np.float64)
+    t_emas = np.array([training_ema(r, alpha) for r in records])
+    max_t = float(np.max([max(r.training_times) if r.training_times else 0.0
+                          for r in records])) or 1.0
+    m_emas = np.array(
+        [missed_round_ema(r, current_round, alpha) for r in records])
+    return np.stack([t_emas, m_emas * max_t], axis=1)

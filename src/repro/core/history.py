@@ -1,0 +1,163 @@
+"""Client behavioural history — paper §V-A/§V-B.
+
+For every client we track the three attributes the paper collects
+(training time, missed rounds, cooldown) plus invocation bookkeeping
+used by the selection algorithm (Alg. 2) and the bias metric.
+
+The cooldown follows Eq. 1 of the paper:
+
+    cooldown = 0            if the client completed training in time
+             = 1            on a miss when cooldown == 0
+             = cooldown * 2 on a miss otherwise
+"""
+from __future__ import annotations
+
+import json
+import threading
+from dataclasses import dataclass, field, asdict
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+
+@dataclass
+class ClientRecord:
+    """Behavioural record for one client (one row of the history DB)."""
+
+    client_id: str
+    training_times: List[float] = field(default_factory=list)
+    missed_rounds: List[int] = field(default_factory=list)
+    cooldown: int = 0
+    invocations: int = 0
+    successes: int = 0
+    failures: int = 0
+    last_round: int = -1
+
+    # ---- tiering predicates (paper §V-A) -------------------------------
+    @property
+    def is_rookie(self) -> bool:
+        """Never produced behavioural data: no recorded time and no miss."""
+        return not self.training_times and not self.missed_rounds
+
+    @property
+    def is_straggler(self) -> bool:
+        """Cooldown > 0 characterises tier-3 stragglers (paper §V-B)."""
+        return self.cooldown > 0 and not self.is_rookie
+
+    @property
+    def is_participant(self) -> bool:
+        return not self.is_rookie and not self.is_straggler
+
+    # ---- Eq. 1 ----------------------------------------------------------
+    def apply_success(self) -> None:
+        """Controller observed an in-time completion → cooldown = 0."""
+        self.cooldown = 0
+        self.successes += 1
+
+    def apply_miss(self, round_number: int) -> None:
+        """Controller observed a miss/failure for `round_number` (Eq. 1)."""
+        if round_number not in self.missed_rounds:
+            self.missed_rounds.append(round_number)
+        self.cooldown = 1 if self.cooldown == 0 else self.cooldown * 2
+        self.failures += 1
+
+    def correct_missed_round(self, round_number: int) -> None:
+        """Client-side correction (Alg. 1 lines 24-26): a slow-but-alive
+        client that finished late deletes the round from its missed list —
+        distinguishing *slow* from *crashed* happens on the client side."""
+        if round_number in self.missed_rounds:
+            self.missed_rounds.remove(round_number)
+
+    def record_training_time(self, seconds: float) -> None:
+        self.training_times.append(float(seconds))
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ClientRecord":
+        return cls(**d)
+
+
+class ClientHistoryDB:
+    """The `client history` collection the paper adds to the FedLess DB
+    (§IV-A).  In-memory with optional JSON persistence; thread-safe because
+    the simulated FaaS platform completes invocations concurrently."""
+
+    def __init__(self, path: Optional[str] = None):
+        self._records: Dict[str, ClientRecord] = {}
+        self._lock = threading.RLock()
+        self._path = Path(path) if path else None
+        if self._path and self._path.exists():
+            self.load(self._path)
+
+    # ---- CRUD ------------------------------------------------------------
+    def get(self, client_id: str) -> ClientRecord:
+        with self._lock:
+            if client_id not in self._records:
+                self._records[client_id] = ClientRecord(client_id=client_id)
+            return self._records[client_id]
+
+    def all(self) -> List[ClientRecord]:
+        with self._lock:
+            return list(self._records.values())
+
+    def ensure(self, client_ids: Iterable[str]) -> None:
+        for cid in client_ids:
+            self.get(cid)
+
+    # ---- controller-side updates (Alg. 1, lines 5-13) --------------------
+    def mark_success(self, client_id: str, round_number: int) -> None:
+        with self._lock:
+            rec = self.get(client_id)
+            rec.apply_success()
+            rec.last_round = round_number
+            rec.invocations += 1
+
+    def mark_miss(self, client_id: str, round_number: int) -> None:
+        with self._lock:
+            rec = self.get(client_id)
+            rec.apply_miss(round_number)
+            rec.last_round = round_number
+            rec.invocations += 1
+
+    # ---- client-side updates (Alg. 1, lines 16-27) ------------------------
+    def client_report(self, client_id: str, round_number: int,
+                      training_time: float) -> None:
+        """A (possibly late) client pushes its measured training time and
+        corrects its missed-rounds entry for the current round."""
+        with self._lock:
+            rec = self.get(client_id)
+            rec.record_training_time(training_time)
+            rec.correct_missed_round(round_number)
+
+    # ---- tier partition (paper §V-A) --------------------------------------
+    def partition(self, client_ids: Iterable[str]):
+        """Partition into (rookies, participants, stragglers)."""
+        rookies, participants, stragglers = [], [], []
+        with self._lock:
+            for cid in client_ids:
+                rec = self.get(cid)
+                if rec.is_rookie:
+                    rookies.append(rec)
+                elif rec.is_straggler:
+                    stragglers.append(rec)
+                else:
+                    participants.append(rec)
+        return rookies, participants, stragglers
+
+    # ---- persistence -------------------------------------------------------
+    def save(self, path: Optional[str] = None) -> None:
+        p = Path(path) if path else self._path
+        if p is None:
+            raise ValueError("no persistence path configured")
+        with self._lock:
+            payload = {cid: rec.to_dict() for cid, rec in self._records.items()}
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(payload))
+
+    def load(self, path) -> None:
+        payload = json.loads(Path(path).read_text())
+        with self._lock:
+            self._records = {
+                cid: ClientRecord.from_dict(d) for cid, d in payload.items()
+            }

@@ -1,0 +1,101 @@
+"""Client selection — paper Algorithm 2 (§V-C).
+
+Priority: rookies → clustered participants (sorted clusters, progress-offset
+start) → stragglers.  Selection is deterministic given the RNG seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from .clustering import cluster_clients
+from .features import feature_matrix, total_ema
+from .history import ClientHistoryDB, ClientRecord
+
+
+@dataclass
+class SelectionPlan:
+    selected: List[str]
+    rookies: List[str]
+    cluster_clients: List[str]
+    straggler_clients: List[str]
+    n_clusters: int
+    eps: float
+
+
+def select_clients(history: ClientHistoryDB, client_ids: Sequence[str],
+                   round_number: int, max_rounds: int,
+                   clients_per_round: int, rng: np.random.Generator,
+                   ema_alpha: float = 0.5) -> SelectionPlan:
+    """Algorithm 2 of the paper."""
+    rookies, participants, stragglers = history.partition(client_ids)
+
+    # Lines 3-5: rookies first — guarantees every client contributes once
+    # and seeds behavioural data for future clustering.
+    if len(rookies) >= clients_per_round:
+        chosen = list(rng.choice([r.client_id for r in rookies],
+                                 size=clients_per_round, replace=False))
+        return SelectionPlan(chosen, chosen, [], [], 0, 0.0)
+
+    selected_rookies = [r.client_id for r in rookies]
+    remaining = clients_per_round - len(selected_rookies)
+
+    # Lines 6-8: how many we need from tiers 2 and 3. Stragglers are only
+    # used when rookies+participants cannot fill the round.
+    n_cluster_clients = min(remaining, len(participants))
+    n_straggler_clients = min(remaining - n_cluster_clients, len(stragglers))
+    straggler_ids = [s.client_id for s in stragglers]
+    selected_stragglers = (
+        list(rng.choice(straggler_ids, size=n_straggler_clients,
+                        replace=False))
+        if n_straggler_clients > 0 else [])
+
+    # Lines 9-17: cluster participants on (trainingEma, missedRoundEma·maxT).
+    selected_cluster: List[str] = []
+    n_clusters, eps = 0, 0.0
+    if n_cluster_clients > 0:
+        feats = feature_matrix(participants, round_number, alpha=ema_alpha)
+        result = cluster_clients(feats)
+        n_clusters, eps = result.n_clusters, result.eps
+
+        # Sort clusters by ascending mean totalEma (Eq. 2) of their members.
+        max_t = float(max((max(p.training_times) if p.training_times else 0.0)
+                          for p in participants)) or 1.0
+        by_label = {}
+        for rec, lab in zip(participants, result.labels):
+            by_label.setdefault(int(lab), []).append(rec)
+        order = sorted(
+            by_label,
+            key=lambda lab: float(np.mean([
+                total_ema(r, round_number, max_t, ema_alpha)
+                for r in by_label[lab]])))
+
+        # Start from the cluster matching current training progress and wrap
+        # (avoids always draining the fastest cluster; paper §V-C).
+        progress = 0.0 if max_rounds <= 0 else min(1.0, round_number / max_rounds)
+        start = int(progress * len(order)) % len(order)
+        rotated = order[start:] + order[:start]
+
+        need = n_cluster_clients
+        for lab in rotated:
+            if need <= 0:
+                break
+            members = by_label[lab]
+            # Prefer least-invoked members → balanced contributions (§VI-B).
+            members = sorted(members, key=lambda r: (r.invocations, r.client_id))
+            take = members[:need]
+            selected_cluster.extend(r.client_id for r in take)
+            need -= len(take)
+
+    selected = selected_rookies + selected_cluster + selected_stragglers
+    return SelectionPlan(selected, selected_rookies, selected_cluster,
+                         selected_stragglers, n_clusters, eps)
+
+
+def select_random(client_ids: Sequence[str], clients_per_round: int,
+                  rng: np.random.Generator) -> List[str]:
+    """FedAvg/FedProx client selection: uniform random sample."""
+    k = min(clients_per_round, len(client_ids))
+    return list(rng.choice(list(client_ids), size=k, replace=False))

@@ -1,0 +1,161 @@
+"""Training strategies: FedAvg, FedProx, FedLesScan.
+
+A Strategy owns (a) client selection for a round, (b) the aggregation
+scheme, and (c) an optional client-side loss hook (FedProx's proximal
+term).  The controller (fl/controller.py) is strategy-agnostic — this is
+the paper's `Strategy Manager` component (§IV-A).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from .aggregation import (ClientUpdate, UpdateStore, fedavg_aggregate,
+                          staleness_aggregate)
+from .history import ClientHistoryDB
+from .selection import SelectionPlan, select_clients, select_random
+
+Pytree = Any
+
+
+@dataclass
+class StrategyConfig:
+    clients_per_round: int = 10
+    max_rounds: int = 50
+    tau: int = 2                  # staleness cutoff (FedLesScan, paper §V-D)
+    ema_alpha: float = 0.5
+    fedprox_mu: float = 0.001     # proximal coefficient (FedProx)
+
+
+class Strategy:
+    """Base class. Subclasses override selection/aggregation behaviour."""
+
+    name = "base"
+    uses_history = False          # does selection read behavioural data?
+    semi_async = False            # accept late updates into later rounds?
+
+    def __init__(self, config: StrategyConfig, history: ClientHistoryDB,
+                 seed: int = 0):
+        self.config = config
+        self.history = history
+        self.rng = np.random.default_rng(seed)
+        self.update_store = UpdateStore(tau=config.tau)
+        self.last_plan: Optional[SelectionPlan] = None
+
+    # ---- selection ------------------------------------------------------
+    def select(self, client_ids: Sequence[str], round_number: int) -> List[str]:
+        raise NotImplementedError
+
+    # ---- aggregation ----------------------------------------------------
+    def aggregate(self, updates: Sequence[ClientUpdate], round_number: int,
+                  now: Optional[float] = None) -> Optional[Pytree]:
+        """Return the new global model or None (keep previous)."""
+        if not updates:
+            return None
+        return fedavg_aggregate(list(updates))
+
+    # ---- client-side hooks ----------------------------------------------
+    def proximal_mu(self) -> float:
+        """FedProx adds mu/2 ||w - w_global||^2 to the local loss; other
+        strategies return 0.0 (no-op)."""
+        return 0.0
+
+
+class FedAvg(Strategy):
+    """McMahan et al. — random selection + cardinality-weighted averaging.
+    Synchronous: late updates are discarded."""
+
+    name = "fedavg"
+
+    def select(self, client_ids, round_number):
+        return select_random(client_ids, self.config.clients_per_round,
+                             self.rng)
+
+
+class FedProx(FedAvg):
+    """Sahu/Li et al. — FedAvg + proximal term in the client loss.
+    Selection remains random (the paper notes this makes it straggler-
+    sensitive)."""
+
+    name = "fedprox"
+
+    def proximal_mu(self) -> float:
+        return self.config.fedprox_mu
+
+
+class FedLesScan(Strategy):
+    """The paper's strategy: tiered clustering-based selection (Alg. 2)
+    + staleness-aware aggregation (Eq. 3) over a semi-async update store."""
+
+    name = "fedlesscan"
+    uses_history = True
+    semi_async = True
+
+    def select(self, client_ids, round_number):
+        plan = select_clients(
+            self.history, client_ids, round_number,
+            self.config.max_rounds, self.config.clients_per_round, self.rng,
+            ema_alpha=self.config.ema_alpha)
+        self.last_plan = plan
+        return plan.selected
+
+    def aggregate(self, updates, round_number, now=None):
+        # include late updates from previous rounds that have ARRIVED by
+        # now (in-flight ones stay queued; aged-out ones are dropped)
+        pending = self.update_store.pop_for_round(round_number, now)
+        merged = list(updates) + pending
+        if not merged:
+            return None
+        return staleness_aggregate(merged, round_number, tau=self.config.tau)
+
+    def accept_late_update(self, update: ClientUpdate,
+                           arrival_time: float = 0.0) -> None:
+        """Semi-async path: a straggler finished after its round closed;
+        its update is cached and dampened into a later aggregation."""
+        self.update_store.push(update, arrival_time)
+
+
+class SAFA(Strategy):
+    """Wu et al. [26] — the semi-asynchronous competitor the paper
+    contrasts with (§III-B): invoke ALL clients every round, close the
+    round at the k-th fastest response (k = clients_per_round), cache
+    slower responses for subsequent rounds.  Communication/invocation
+    cost is deliberately high — that's the trade-off the paper calls out.
+    """
+
+    name = "safa"
+    semi_async = True
+    invoke_all = True                 # controller invokes every client
+
+    @property
+    def quorum(self) -> int:
+        return self.config.clients_per_round
+
+    def select(self, client_ids, round_number):
+        return list(client_ids)
+
+    def aggregate(self, updates, round_number, now=None):
+        pending = self.update_store.pop_for_round(round_number, now)
+        merged = list(updates) + pending
+        if not merged:
+            return None
+        return staleness_aggregate(merged, round_number,
+                                   tau=self.config.tau)
+
+    def accept_late_update(self, update: ClientUpdate,
+                           arrival_time: float = 0.0) -> None:
+        self.update_store.push(update, arrival_time)
+
+
+STRATEGIES = {cls.name: cls for cls in (FedAvg, FedProx, FedLesScan, SAFA)}
+
+
+def make_strategy(name: str, config: StrategyConfig,
+                  history: ClientHistoryDB, seed: int = 0) -> Strategy:
+    try:
+        return STRATEGIES[name](config, history, seed=seed)
+    except KeyError:
+        raise ValueError(f"unknown strategy {name!r}; "
+                         f"available: {sorted(STRATEGIES)}") from None

@@ -1,0 +1,14 @@
+"""Simulated serverless substrate: platform, invoker, GCF cost model."""
+from .cost import CostMeter, FunctionShape, PriceBook, invocation_cost
+from .invoker import InvocationResult, MockInvoker
+from .profiles import (PLATFORM_PROFILES, MultiPlatformInvoker,
+                       make_platform)
+from .platform import (ClientProfile, FaaSConfig, InvocationOutcome,
+                       SimulatedFaaSPlatform, VirtualClock)
+
+__all__ = [
+    "CostMeter", "FunctionShape", "PriceBook", "invocation_cost",
+    "InvocationResult", "MockInvoker", "ClientProfile", "FaaSConfig",
+    "InvocationOutcome", "SimulatedFaaSPlatform", "VirtualClock",
+    "PLATFORM_PROFILES", "MultiPlatformInvoker", "make_platform",
+]

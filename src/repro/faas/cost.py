@@ -1,0 +1,74 @@
+"""GCF gen-2 cost model (paper §VI-A5 / [85]).
+
+Google bills 2nd-gen Cloud Functions per vCPU-second, per GiB-second of
+memory, and per million invocations (Tier-1 prices, 2022):
+
+    vCPU-second   $0.0000240
+    GiB-second    $0.0000025
+    invocations   $0.40 / 1e6
+
+Gen-2 functions get a vCPU allocation proportional to memory
+(2048 MB → 1 vCPU, the paper's client config).  The paper estimates a
+straggler's cost as running for the *entire round duration* (§VI-C), which
+`straggler_invocation_cost` reproduces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PriceBook:
+    vcpu_second: float = 0.0000240
+    gib_second: float = 0.0000025
+    per_invocation: float = 0.40 / 1_000_000
+    free_tier: bool = False  # paper reports raw costs, no free tier
+
+
+@dataclass(frozen=True)
+class FunctionShape:
+    memory_mb: int = 2048
+    vcpus: float = 1.0
+    timeout_s: float = 540.0   # paper's client function timeout
+
+
+def invocation_cost(duration_s: float, shape: FunctionShape,
+                    prices: PriceBook = PriceBook()) -> float:
+    """Cost of one function invocation running for `duration_s` seconds.
+
+    GCF bills duration rounded up to the nearest 100 ms increment.
+    """
+    billed = max(0.1, -(-duration_s // 0.1) * 0.1)  # ceil to 100 ms
+    gib = shape.memory_mb / 1024.0
+    return (billed * shape.vcpus * prices.vcpu_second
+            + billed * gib * prices.gib_second
+            + prices.per_invocation)
+
+
+def straggler_invocation_cost(round_duration_s: float, shape: FunctionShape,
+                              prices: PriceBook = PriceBook()) -> float:
+    """Paper §VI-C: a straggler is charged as if it ran the whole round."""
+    return invocation_cost(round_duration_s, shape, prices)
+
+
+class CostMeter:
+    """Accumulates experiment cost across invocations (one per client call)."""
+
+    def __init__(self, shape: FunctionShape = FunctionShape(),
+                 prices: PriceBook = PriceBook()):
+        self.shape = shape
+        self.prices = prices
+        self.total = 0.0
+        self.invocations = 0
+
+    def charge(self, duration_s: float) -> float:
+        c = invocation_cost(duration_s, self.shape, self.prices)
+        self.total += c
+        self.invocations += 1
+        return c
+
+    def charge_straggler(self, round_duration_s: float) -> float:
+        c = straggler_invocation_cost(round_duration_s, self.shape, self.prices)
+        self.total += c
+        self.invocations += 1
+        return c

@@ -1,0 +1,59 @@
+"""Invoker — bridges the FL controller and the (simulated) FaaS platform.
+
+This is the paper's *Mock Invoker* (§IV-A): it lets the entire system run
+on one machine by simulating the behaviour of the deployed client
+functions, while executing the clients' actual training code so that the
+produced model updates are real.  The controller code path is identical to
+what a live-HTTP invoker would use.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from ..core.aggregation import ClientUpdate
+from .platform import (ClientProfile, InvocationOutcome,
+                       SimulatedFaaSPlatform)
+
+Pytree = Any
+
+# Client work callback: (client_id, global_params, round) ->
+#   (ClientUpdate, nominal_work_seconds)
+ClientWorkFn = Callable[[str, Pytree, int], tuple]
+
+
+@dataclass
+class InvocationResult:
+    outcome: InvocationOutcome
+    update: Optional[ClientUpdate]  # None when the invocation crashed
+
+
+class MockInvoker:
+    """Invokes client functions against the simulated platform.
+
+    `profiles` carries the experiment scenario's straggler injection
+    (slow factors / crashes) keyed by client id.
+    """
+
+    def __init__(self, platform: SimulatedFaaSPlatform,
+                 work_fn: ClientWorkFn,
+                 profiles: Optional[Dict[str, ClientProfile]] = None):
+        self.platform = platform
+        self.work_fn = work_fn
+        self.profiles = profiles or {}
+
+    def invoke_clients(self, client_ids: Sequence[str], global_params: Pytree,
+                       round_number: int,
+                       start_time: float) -> List[InvocationResult]:
+        results = []
+        for cid in client_ids:
+            profile = self.profiles.get(cid, ClientProfile())
+            if profile.crash:
+                outcome = self.platform.invoke(cid, 0.0, start_time, profile)
+                results.append(InvocationResult(outcome=outcome, update=None))
+                continue
+            update, nominal_s = self.work_fn(cid, global_params, round_number)
+            outcome = self.platform.invoke(cid, nominal_s, start_time, profile)
+            results.append(InvocationResult(
+                outcome=outcome, update=None if outcome.crashed else update))
+        return results

@@ -1,0 +1,148 @@
+"""Simulated FaaS platform with a virtual clock.
+
+Models the serverless characteristics the paper identifies as the reason
+stragglers behave differently in FaaS (§II, §III-C):
+
+  * cold starts — a function instance that is not warm pays a sampled
+    cold-start latency before useful work begins;
+  * scale-to-zero — warm instances expire after an idle timeout;
+  * performance variation — each fresh instance lands on an unknown VM and
+    gets a sampled speed factor (Wang et al. [29]);
+  * weak reliability — invocations fail with (1 − SLO) probability
+    (GCF SLO: 99.95% uptime);
+  * function timeout — invocations are killed at the platform limit.
+
+Everything runs on a virtual clock: `invoke()` returns the *would-be*
+finish time instead of sleeping, so a full FL experiment with hundreds of
+clients simulates in milliseconds while preserving the timing structure
+the scheduling strategy reacts to.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from .cost import FunctionShape
+
+
+@dataclass(frozen=True)
+class FaaSConfig:
+    cold_start_median_s: float = 3.0     # GCF gen-2 cold start, median
+    cold_start_sigma: float = 0.5        # lognormal spread
+    warm_idle_timeout_s: float = 900.0   # scale-to-zero after 15 min idle
+    perf_variation: tuple = (0.85, 1.35) # per-instance speed multiplier
+    failure_rate: float = 0.0005         # 1 − SLO(99.95%)
+    network_jitter_s: float = 0.5        # invocation + result upload jitter
+    function_timeout_s: float = 540.0    # platform kill limit (paper config)
+
+
+@dataclass
+class WarmInstance:
+    speed_factor: float
+    warm_until: float
+
+
+@dataclass
+class InvocationOutcome:
+    client_id: str
+    start_time: float
+    cold_start_s: float
+    compute_s: float            # scaled work time on the landed instance
+    crashed: bool               # platform-level failure or timeout kill
+    finish_time: float          # = start + cold + compute + jitter (inf if crashed)
+    cold: bool
+
+    @property
+    def duration_s(self) -> float:
+        """Billable duration (platform bills until kill on timeout)."""
+        if self.crashed:
+            return self.cold_start_s + self.compute_s
+        return self.finish_time - self.start_time
+
+
+@dataclass
+class ClientProfile:
+    """Per-client behaviour injected by the experiment scenario.
+
+    `slow_factor` > 1 models resource heterogeneity (weak VM / big data);
+    `crash` models the paper's failure-type stragglers (never respond).
+    """
+    slow_factor: float = 1.0
+    crash: bool = False
+
+
+class VirtualClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def advance_to(self, t: float) -> None:
+        self.now = max(self.now, t)
+
+
+class SimulatedFaaSPlatform:
+    """One deployment target for client functions (e.g. 'GCF gen2')."""
+
+    def __init__(self, config: FaaSConfig = FaaSConfig(),
+                 shape: FunctionShape = FunctionShape(), seed: int = 0):
+        self.config = config
+        self.shape = shape
+        self.rng = np.random.default_rng(seed)
+        self._warm: Dict[str, WarmInstance] = {}
+        self.clock = VirtualClock()
+        self.cold_starts = 0
+        self.invocations = 0
+
+    # ------------------------------------------------------------------
+    def _cold_start_latency(self) -> float:
+        c = self.config
+        return float(self.rng.lognormal(np.log(c.cold_start_median_s),
+                                        c.cold_start_sigma))
+
+    def _instance(self, client_id: str, now: float) -> tuple:
+        """Return (speed_factor, cold_start_s, was_cold) for this invocation,
+        respecting the warm pool / scale-to-zero."""
+        inst = self._warm.get(client_id)
+        if inst is not None and inst.warm_until >= now:
+            return inst.speed_factor, 0.0, False
+        lo, hi = self.config.perf_variation
+        speed = float(self.rng.uniform(lo, hi))
+        self.cold_starts += 1
+        return speed, self._cold_start_latency(), True
+
+    # ------------------------------------------------------------------
+    def invoke(self, client_id: str, nominal_work_s: float,
+               start_time: float,
+               profile: Optional[ClientProfile] = None) -> InvocationOutcome:
+        """Simulate one client-function invocation starting at `start_time`.
+
+        `nominal_work_s` is the client's ideal training time (data size ×
+        epochs × per-sample cost); the platform scales it by the landed
+        instance's speed factor and the client's heterogeneity profile.
+        """
+        profile = profile or ClientProfile()
+        self.invocations += 1
+        speed, cold_s, was_cold = self._instance(client_id, start_time)
+
+        compute = nominal_work_s * speed * profile.slow_factor
+        jitter = float(abs(self.rng.normal(0.0, self.config.network_jitter_s)))
+        total = cold_s + compute + jitter
+
+        failed = (profile.crash
+                  or self.rng.random() < self.config.failure_rate
+                  or total > self.config.function_timeout_s)
+
+        finish = float("inf") if failed else start_time + total
+        if not failed:
+            # keep/refresh the warm instance
+            self._warm[client_id] = WarmInstance(
+                speed_factor=speed,
+                warm_until=finish + self.config.warm_idle_timeout_s)
+        else:
+            self._warm.pop(client_id, None)
+
+        return InvocationOutcome(
+            client_id=client_id, start_time=start_time, cold_start_s=cold_s,
+            compute_s=compute if not profile.crash else 0.0,
+            crashed=failed, finish_time=finish, cold=was_cold)

@@ -1,0 +1,60 @@
+"""Client runtime — paper Algorithm 1, Client_Update.
+
+Each FL client is (conceptually) a FaaS function: stateless between
+invocations, loading the global model, training on its local shard, and
+pushing the update + its measured training time back to the database.
+`ClientPool.work_fn` is what the MockInvoker executes per invocation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+from ..core.aggregation import ClientUpdate
+from ..data.synthetic import ArrayDataset
+from .tasks import ClassificationTask
+
+Pytree = Any
+
+
+@dataclass
+class ClientState:
+    dataset: ArrayDataset
+    test_dataset: Optional[ArrayDataset] = None
+
+
+class ClientPool:
+    """Holds every client's local shard + the shared task definition."""
+
+    def __init__(self, task: ClassificationTask,
+                 datasets: Dict[str, ArrayDataset],
+                 test_datasets: Optional[Dict[str, ArrayDataset]] = None,
+                 proximal_mu: float = 0.0, seed: int = 0):
+        self.task = task
+        self.clients = {
+            cid: ClientState(ds, (test_datasets or {}).get(cid))
+            for cid, ds in datasets.items()
+        }
+        self.proximal_mu = proximal_mu
+        self.seed = seed
+
+    @property
+    def client_ids(self):
+        return sorted(self.clients)
+
+    def num_samples(self, cid: str) -> int:
+        return len(self.clients[cid].dataset)
+
+    # ------------------------------------------------------------------
+    def work_fn(self, cid: str, global_params: Pytree,
+                round_number: int) -> Tuple[ClientUpdate, float]:
+        """Client_Update body: train locally, return the update and the
+        nominal training duration for the virtual clock."""
+        state = self.clients[cid]
+        params, _loss = self.task.local_train(
+            global_params, state.dataset, mu=self.proximal_mu,
+            seed=hash((cid, round_number, self.seed)) % (2 ** 31))
+        update = ClientUpdate(
+            client_id=cid, params=params, num_samples=len(state.dataset),
+            round_number=round_number)
+        return update, self.task.nominal_work_seconds(state.dataset)

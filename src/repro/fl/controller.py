@@ -1,0 +1,211 @@
+"""FedLess controller — paper Algorithm 1, Train_Global_Model.
+
+The controller is a lightweight process (the paper removed the K8s/OW
+dependency, §IV-A): per round it asks the Strategy Manager for a client
+subset, invokes them through the (mock) invoker, waits until the round
+deadline on the virtual clock, updates the behavioural history, runs the
+strategy's aggregation, and meters time + cost.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..core.history import ClientHistoryDB
+from ..core.strategies import Strategy
+from ..faas.cost import CostMeter
+from ..faas.invoker import MockInvoker
+from .client import ClientPool
+from .metrics import bias, effective_update_ratio, weighted_accuracy
+
+Pytree = Any
+
+
+@dataclass
+class RoundStats:
+    round_number: int
+    selected: List[str]
+    successes: List[str]
+    late: List[str]
+    crashed: List[str]
+    duration_s: float
+    eur: float
+    cost: float
+    accuracy: Optional[float] = None
+    aggregated_updates: int = 0
+
+
+@dataclass
+class ExperimentResult:
+    strategy: str
+    rounds: List[RoundStats] = field(default_factory=list)
+    final_accuracy: float = 0.0
+    accuracy_curve: List[tuple] = field(default_factory=list)
+
+    @property
+    def total_duration_s(self) -> float:
+        return sum(r.duration_s for r in self.rounds)
+
+    @property
+    def total_cost(self) -> float:
+        return sum(r.cost for r in self.rounds)
+
+    @property
+    def mean_eur(self) -> float:
+        return float(np.mean([r.eur for r in self.rounds])) if self.rounds else 1.0
+
+    def invocation_counts(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for r in self.rounds:
+            for cid in r.selected:
+                counts[cid] = counts.get(cid, 0) + 1
+        return counts
+
+    @property
+    def bias(self) -> int:
+        return bias(self.invocation_counts())
+
+
+class Controller:
+    def __init__(self, strategy: Strategy, invoker: MockInvoker,
+                 pool: ClientPool, history: ClientHistoryDB,
+                 cost_meter: Optional[CostMeter] = None,
+                 round_timeout_s: float = 120.0,
+                 eval_every: int = 5, eval_fraction: float = 0.2,
+                 seed: int = 0):
+        self.strategy = strategy
+        self.invoker = invoker
+        self.pool = pool
+        self.history = history
+        self.cost = cost_meter or CostMeter()
+        self.round_timeout_s = round_timeout_s
+        self.eval_every = eval_every
+        self.eval_fraction = eval_fraction
+        self.rng = np.random.default_rng(seed)
+        self.platform = invoker.platform
+
+    # ------------------------------------------------------------------
+    def _evaluate(self, params: Pytree) -> float:
+        """Paper §VI-A5: accuracy on a random subset of clients' test sets,
+        weighted by test cardinality."""
+        ids = [cid for cid in self.pool.client_ids
+               if self.pool.clients[cid].test_dataset is not None]
+        if not ids:
+            return 0.0
+        k = max(1, int(len(ids) * self.eval_fraction))
+        sample = self.rng.choice(ids, size=min(k, len(ids)), replace=False)
+        per_client = []
+        for cid in sample:
+            ds = self.pool.clients[cid].test_dataset
+            acc, _ = self.pool.task.evaluate(params, ds)
+            per_client.append((acc, len(ds)))
+        return weighted_accuracy(per_client)
+
+    # ------------------------------------------------------------------
+    def run_round(self, global_params: Pytree,
+                  round_number: int) -> tuple:
+        """One Train_Global_Model iteration. Returns (params, RoundStats)."""
+        clock = self.platform.clock
+        t0 = clock.now
+        deadline = t0 + self.round_timeout_s
+
+        selected = self.strategy.select(self.pool.client_ids, round_number)
+        results = self.invoker.invoke_clients(
+            selected, global_params, round_number, t0)
+
+        # SAFA-style dynamic quorum: the round closes at the k-th fastest
+        # response instead of a fixed timeout (still capped by it).
+        quorum = getattr(self.strategy, "quorum", None)
+        if quorum:
+            finishes = sorted(r.outcome.finish_time for r in results
+                              if not r.outcome.crashed)
+            if finishes:
+                kth = finishes[min(quorum, len(finishes)) - 1]
+                deadline = min(deadline, kth)
+
+        successes, late, crashed = [], [], []
+        round_cost = 0.0
+        for res in results:
+            out = res.outcome
+            if not out.crashed and out.finish_time <= deadline:
+                successes.append(res)
+            elif not out.crashed:
+                late.append(res)
+            else:
+                crashed.append(res)
+
+        # Round duration: slowest in-time client, or the deadline if anyone
+        # missed (synchronous server waits until the deadline, §VI-C; with
+        # a SAFA quorum the deadline is the k-th fastest response).
+        if late or crashed:
+            duration = deadline - t0
+        elif successes:
+            duration = max(r.outcome.finish_time for r in successes) - t0
+        else:
+            duration = deadline - t0
+
+        # --- controller-side history updates (Alg. 1 lines 5-13) -------
+        for res in successes:
+            cid = res.outcome.client_id
+            self.history.mark_success(cid, round_number)
+            # client-side report (Alg. 1 lines 16-27) — in-time client
+            self.history.client_report(cid, round_number,
+                                       res.outcome.duration_s)
+            round_cost += self.cost.charge(res.outcome.duration_s)
+        for res in late:
+            cid = res.outcome.client_id
+            self.history.mark_miss(cid, round_number)
+            # the late client eventually finishes: corrects its missed
+            # round + reports its time (client-side), and its update is
+            # cached for the next aggregation when semi-async.
+            self.history.client_report(cid, round_number,
+                                       res.outcome.duration_s)
+            if self.strategy.semi_async and res.update is not None:
+                self.strategy.accept_late_update(
+                    res.update, arrival_time=res.outcome.finish_time)
+            round_cost += self.cost.charge_straggler(duration)
+        for res in crashed:
+            cid = res.outcome.client_id
+            self.history.mark_miss(cid, round_number)
+            round_cost += self.cost.charge_straggler(duration)
+
+        # --- aggregation runs at the round deadline (virtual now) -------
+        updates = [r.update for r in successes if r.update is not None]
+        new_params = self.strategy.aggregate(updates, round_number,
+                                             now=t0 + duration)
+        if new_params is None:
+            new_params = global_params
+
+        clock.advance_to(t0 + duration)
+
+        stats = RoundStats(
+            round_number=round_number, selected=list(selected),
+            successes=[r.outcome.client_id for r in successes],
+            late=[r.outcome.client_id for r in late],
+            crashed=[r.outcome.client_id for r in crashed],
+            duration_s=float(duration),
+            eur=effective_update_ratio(len(successes), len(selected)),
+            cost=round_cost,
+            aggregated_updates=len(updates) + len(self.strategy.update_store))
+        return new_params, stats
+
+    # ------------------------------------------------------------------
+    def run(self, global_params: Pytree, n_rounds: int,
+            verbose: bool = False) -> tuple:
+        result = ExperimentResult(strategy=self.strategy.name)
+        params = global_params
+        for rnd in range(n_rounds):
+            params, stats = self.run_round(params, rnd)
+            if self.eval_every and (rnd + 1) % self.eval_every == 0:
+                stats.accuracy = self._evaluate(params)
+                result.accuracy_curve.append((rnd, stats.accuracy))
+            result.rounds.append(stats)
+            if verbose:
+                acc = f" acc={stats.accuracy:.3f}" if stats.accuracy else ""
+                print(f"[{self.strategy.name}] round {rnd:3d} "
+                      f"eur={stats.eur:.2f} dur={stats.duration_s:6.1f}s "
+                      f"cost=${stats.cost:.4f}{acc}")
+        result.final_accuracy = self._evaluate(params)
+        return params, result

@@ -1,0 +1,105 @@
+"""Experiment harness — paper §VI-A4 scenarios.
+
+standard     : deployed functions as-is; round timeout generous enough for
+               healthy clients to finish.
+straggler(%) : a fixed fraction of clients is made to straggle — half of
+               them *slow* (finish after the round deadline: cold starts /
+               bandwidth / weak VM) and half *crash* (never respond),
+               matching the paper's two failure effects.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.history import ClientHistoryDB
+from ..core.strategies import StrategyConfig, make_strategy
+from ..data.synthetic import ArrayDataset
+from ..faas.cost import CostMeter
+from ..faas.invoker import MockInvoker
+from ..faas.platform import ClientProfile, FaaSConfig, SimulatedFaaSPlatform
+from .client import ClientPool
+from .controller import Controller, ExperimentResult
+from .tasks import ClassificationTask, TaskConfig
+
+
+@dataclass
+class ScenarioConfig:
+    straggler_fraction: float = 0.0   # 0.0 → standard scenario
+    slow_share: float = 0.5           # of stragglers: slow vs crash
+    slow_factor: float = 6.0          # slowdown multiplier for slow clients
+    slow_factor_jitter: float = 0.0   # ± uniform jitter on slow_factor —
+                                      # heterogeneous speeds make the
+                                      # clustering component observable
+    round_timeout_s: float = 120.0
+    seed: int = 0
+
+
+@dataclass
+class ExperimentConfig:
+    strategy: str = "fedlesscan"
+    n_rounds: int = 30
+    clients_per_round: int = 10
+    tau: int = 2
+    fedprox_mu: float = 0.001
+    eval_every: int = 5
+    seed: int = 0
+    faas: FaaSConfig = field(default_factory=FaaSConfig)
+    scenario: ScenarioConfig = field(default_factory=ScenarioConfig)
+
+
+def make_straggler_profiles(client_ids, scenario: ScenarioConfig
+                            ) -> Dict[str, ClientProfile]:
+    """Randomly designate `straggler_fraction` of clients as stragglers at
+    experiment start (paper §VI-A4), split between slow and crashing."""
+    rng = np.random.default_rng(scenario.seed)
+    ids = list(client_ids)
+    n_strag = int(round(scenario.straggler_fraction * len(ids)))
+    chosen = rng.choice(ids, size=n_strag, replace=False) if n_strag else []
+    profiles: Dict[str, ClientProfile] = {}
+    for i, cid in enumerate(chosen):
+        if i < int(round(n_strag * scenario.slow_share)):
+            f = scenario.slow_factor
+            if scenario.slow_factor_jitter:
+                f += float(rng.uniform(-scenario.slow_factor_jitter,
+                                       scenario.slow_factor_jitter))
+            profiles[cid] = ClientProfile(slow_factor=max(1.0, f))
+        else:
+            profiles[cid] = ClientProfile(crash=True)
+    return profiles
+
+
+def run_experiment(task: ClassificationTask,
+                   train_partitions: Dict[str, ArrayDataset],
+                   test_partitions: Optional[Dict[str, ArrayDataset]],
+                   config: ExperimentConfig,
+                   initial_params=None,
+                   verbose: bool = False) -> ExperimentResult:
+    """Wire up platform → invoker → controller and run one experiment."""
+    history = ClientHistoryDB()
+    history.ensure(train_partitions.keys())
+
+    strat_cfg = StrategyConfig(
+        clients_per_round=config.clients_per_round,
+        max_rounds=config.n_rounds, tau=config.tau,
+        fedprox_mu=config.fedprox_mu)
+    strategy = make_strategy(config.strategy, strat_cfg, history,
+                             seed=config.seed)
+
+    pool = ClientPool(task, train_partitions, test_partitions,
+                      proximal_mu=strategy.proximal_mu(), seed=config.seed)
+    platform = SimulatedFaaSPlatform(config.faas, seed=config.seed)
+    profiles = make_straggler_profiles(pool.client_ids, config.scenario)
+    invoker = MockInvoker(platform, pool.work_fn, profiles)
+
+    controller = Controller(
+        strategy, invoker, pool, history, CostMeter(),
+        round_timeout_s=config.scenario.round_timeout_s,
+        eval_every=config.eval_every, seed=config.seed)
+
+    params = (initial_params if initial_params is not None
+              else task.init_params(config.seed))
+    _, result = controller.run(params, config.n_rounds, verbose=verbose)
+    return result

@@ -1,0 +1,37 @@
+"""Strategy-quality metrics — paper §VI-A5.
+
+EUR (effective update ratio): successful / selected clients in a round.
+Bias: difference between the invocation counts of the most- and
+least-invoked clients over the whole session.
+Weighted accuracy: per-client test accuracy weighted by test-set
+cardinality (the paper's federated evaluation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Sequence
+
+import numpy as np
+
+
+def effective_update_ratio(n_success: int, n_selected: int) -> float:
+    return n_success / n_selected if n_selected else 1.0
+
+
+def bias(invocations: Dict[str, int]) -> int:
+    if not invocations:
+        return 0
+    counts = list(invocations.values())
+    return int(max(counts) - min(counts))
+
+
+def invocation_distribution(invocations: Dict[str, int]) -> np.ndarray:
+    return np.array(sorted(invocations.values()), dtype=np.int64)
+
+
+def weighted_accuracy(per_client: Sequence[tuple]) -> float:
+    """per_client: iterable of (accuracy, test_cardinality)."""
+    accs = np.array([a for a, _ in per_client], dtype=np.float64)
+    card = np.array([c for _, c in per_client], dtype=np.float64)
+    if card.sum() == 0:
+        return float(accs.mean()) if len(accs) else 0.0
+    return float(np.sum(accs * card) / card.sum())

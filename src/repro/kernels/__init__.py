@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (+ jnp oracles) for the perf-critical compute:
+
+  flash_attention — block-tiled online-softmax attention
+                    (causal / sliding-window / softcap / GQA)
+  ssd_scan        — Mamba2 SSD chunked scan with VMEM-carried state
+  fed_agg         — staleness-weighted federated aggregation (Eq. 3)
+"""
+from .ops import fed_agg, flash_attention, ssd_scan
+from . import ref
+
+__all__ = ["fed_agg", "flash_attention", "ssd_scan", "ref"]

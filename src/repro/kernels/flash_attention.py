@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: block-tiled flash attention (online softmax).
+
+Grid (B, H, nq, nk) — the kv dimension iterates innermost so the running
+(max, sumexp, acc) state lives in VMEM scratch across kv steps.  Supports
+causal masking, sliding windows (gemma local layers), logit soft-capping
+(gemma2) and GQA via the k/v BlockSpec index map (q head h reads kv head
+h // group).  Block shapes are MXU-aligned (q/kv tiles × head_dim).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: float, bq: int, bk: int, nk: int, seq_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+
+    s = q @ k.T                                          # (bq, bk) fp32
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = cols < seq_len
+    if causal:
+        mask &= rows >= cols
+    if window:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]                                  # (bq, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: float = 0.0, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, S, d); k/v: (B, Hkv, S, d) with H % Hkv == 0 → (B, H, S, d).
+
+    VMEM working set per grid step: q/k/v tiles (bq+2·bk)·d plus the
+    (bq, d) fp32 accumulator — ≈ (128+256)·128·4B + 128·128·4B ≈ 260 KB,
+    comfortably inside the ~16 MB v5e VMEM with MXU-aligned 128 tiles.
+    """
+    B, H, S, d = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0
+    group = H // Hkv
+
+    bq = min(bq, max(8, S))
+    bk = min(bk, max(8, S))
+    nq = -(-S // bq)
+    nk = -(-S // bk)
+    pad_q = nq * bq - S
+    pad_k = nk * bk - S
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (d ** 0.5), causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, nk=nk, seq_len=S)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S, :]

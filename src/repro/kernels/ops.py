@@ -1,0 +1,40 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (the kernel body
+executes in Python, validating logic + BlockSpec tiling); on a real TPU
+set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False) to lower to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .fed_agg import fed_agg as _fed_agg
+from .flash_attention import flash_attention as _flash_attention
+from .ssd_scan import ssd_scan as _ssd_scan
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def fed_agg(updates: jnp.ndarray, coeffs: jnp.ndarray,
+            tile_p: int = 2048,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _fed_agg(updates, coeffs, tile_p=tile_p,
+                    interpret=INTERPRET if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None, softcap: float = 0.0,
+                    bq: int = 128, bk: int = 128,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, bq=bq, bk=bk,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def ssd_scan(x, a_dt, B, C, chunk: int = 128,
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _ssd_scan(x, a_dt, B, C, chunk=chunk,
+                     interpret=INTERPRET if interpret is None else interpret)

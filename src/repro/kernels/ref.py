@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ fed_agg
+def fed_agg_ref(updates: jnp.ndarray, coeffs: jnp.ndarray) -> jnp.ndarray:
+    """Staleness-weighted aggregation (paper Eq. 3 inner sum).
+
+    updates: (K, P) stacked flattened client updates;
+    coeffs:  (K,)  staleness × cardinality weights.
+    → (P,) aggregated parameter vector, accumulated in fp32.
+    """
+    acc = jnp.einsum("kp,k->p", updates.astype(jnp.float32),
+                     coeffs.astype(jnp.float32))
+    return acc.astype(updates.dtype)
+
+
+# ------------------------------------------------------------ attention
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: float = 0.0) -> jnp.ndarray:
+    """Reference attention. q: (B, H, S, d); k/v: (B, Hkv, S, d) (GQA:
+    H % Hkv == 0).  fp32 softmax, optional sliding window + logit cap."""
+    B, H, S, d = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, S, d)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg, k) / jnp.sqrt(d)
+    scores = scores.astype(jnp.float32)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    idx = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= idx[:, None] >= idx[None, :]
+    if window:
+        mask &= (idx[:, None] - idx[None, :]) < window
+    scores = jnp.where(mask, scores, -2.3819763e38)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v)
+    return out.reshape(B, H, S, d)
+
+
+# ------------------------------------------------------------ ssd
+def ssd_ref(x: jnp.ndarray, a_dt: jnp.ndarray, B: jnp.ndarray,
+            C: jnp.ndarray) -> jnp.ndarray:
+    """Sequential SSD recurrence (the ground truth the chunked forms must
+    match).  x: (b, l, h, p) pre-scaled by dt; a_dt: (b, l, h);
+    B, C: (b, l, h, n).  Returns y: (b, l, h, p)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(state, inp):
+        x_t, a_t, B_t, C_t = inp
+        state = (state * jnp.exp(a_t)[..., None, None]
+                 + x_t[..., :, None] * B_t[..., None, :])
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, C_t)
+        return state, y_t
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(a_dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

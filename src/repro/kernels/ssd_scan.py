@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+Grid (B, H, n_chunks) with the chunk dimension innermost — TPU grids run
+sequentially, so the (P, N) inter-chunk state lives in VMEM scratch and
+is carried across chunk steps (the Pallas analogue of the lax.scan in
+models/ssm.py).  Each step computes the intra-chunk quadratic term as
+masked matmuls (MXU) plus the decayed contribution of the carried state.
+
+Layout: x (B, H, L, P), a_dt (B, H, L, 1), B/C (B, H, L, N), all blocked
+along L by `chunk`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)            # (q, P)
+    a = a_ref[0, 0][:, 0].astype(jnp.float32)      # (q,)
+    Bm = b_ref[0, 0].astype(jnp.float32)           # (q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)           # (q, N)
+
+    a_cum = jnp.cumsum(a)                           # (q,)
+    ss = a_cum[:, None] - a_cum[None, :]            # segsum
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.exp(jnp.where(rows >= cols, ss, NEG))   # (q, q)
+
+    scores = (Cm @ Bm.T) * L                        # (q, q)
+    y_diag = scores @ x                             # (q, P)
+
+    state = state_ref[...]                          # (P, N)
+    y_off = jnp.exp(a_cum)[:, None] * (Cm @ state.T)   # (q, P)
+
+    decay_out = jnp.exp(a_cum[-1] - a_cum)          # (q,)
+    new_state = (jnp.exp(a_cum[-1]) * state
+                 + x.T @ (Bm * decay_out[:, None]))  # (P, N)
+
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+    state_ref[...] = new_state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jnp.ndarray, a_dt: jnp.ndarray, B: jnp.ndarray,
+             C: jnp.ndarray, chunk: int = 128,
+             interpret: bool = True) -> jnp.ndarray:
+    """Model layout in/out: x (b, l, h, p); a_dt (b, l, h); B/C (b, l, h, n)
+    → y (b, l, h, p).  Matches kernels.ref.ssd_ref.
+
+    VMEM per step: x/y chunks 2·(chunk·P) + B/C 2·(chunk·N) + state P·N +
+    the (chunk, chunk) score tile — with chunk=128, P=64, N=128 ≈ 200 KB.
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    xt = jnp.moveaxis(x, 2, 1)                      # (b, h, l, p)
+    at = jnp.moveaxis(a_dt, 2, 1)[..., None]        # (b, h, l, 1)
+    Bt = jnp.moveaxis(B, 2, 1)
+    Ct = jnp.moveaxis(C, 2, 1)
+
+    chunk = min(chunk, l)
+    nc = -(-l // chunk)
+    pad = nc * chunk - l
+    if pad:
+        xt = jnp.pad(xt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        at = jnp.pad(at, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        Bt = jnp.pad(Bt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        Ct = jnp.pad(Ct, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, nc * chunk, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, at, Bt, Ct)
+    return jnp.moveaxis(y[:, :, :l, :], 1, 2)

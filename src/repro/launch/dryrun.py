@@ -1,0 +1,198 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, record memory/cost analysis + collective bytes.
+
+One pair per invocation (subprocess isolation keeps compile memory
+bounded); --all drives the sweep and skips pairs already recorded.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_pair(arch_id: str, shape_name: str, mesh_kind: str,
+             variant_name: str = "baseline") -> dict:
+    import jax
+    from ..configs import INPUT_SHAPES, get_config
+    from ..launch.hlo_analysis import (Roofline, active_param_count,
+                                       collective_summary, loop_aware_costs,
+                                       model_flops, parse_collectives)
+    from ..launch.mesh import make_production_mesh
+    from ..launch.specs import build_step, resolve_config
+    from ..launch.variants import VARIANTS
+
+    variant = VARIANTS[variant_name]
+    cfg = variant.apply(get_config(arch_id))
+    shape = INPUT_SHAPES[shape_name]
+    record: dict = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+                    "kind": shape.kind, "variant": variant_name,
+                    "hypothesis": variant.hypothesis}
+
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        record.update(status="skipped",
+                      reason="full-attention arch; O(S^2) at 524288 tokens "
+                             "excluded by assignment rule (DESIGN.md)")
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = len(jax.devices())
+    t0 = time.time()
+    with mesh:
+        jf, args = build_step(cfg, shape, mesh, variant.sharding)
+        lowered = jf.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+
+    hlo_text = compiled.as_text()
+    ops = parse_collectives(hlo_text)
+    coll = collective_summary(ops)
+    # XLA:CPU cost_analysis counts while bodies once (verified) — use the
+    # loop-aware HLO estimate for roofline terms; keep the raw numbers too.
+    la = loop_aware_costs(hlo_text)
+
+    rcfg = resolve_config(cfg, shape)
+    n_active = active_param_count(rcfg)
+    mf = model_flops(rcfg, shape, n_active)
+    roof = Roofline(flops=la["flops"], hbm_bytes=la["bytes"],
+                    wire_bytes=coll["total_wire_bytes"],
+                    model_flops=mf, chips=chips)
+
+    record.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory_analysis=_mem_dict(mem),
+        cost_analysis={"flops": flops, "bytes_accessed": hbm_bytes,
+                       "note": "XLA:CPU counts while bodies once"},
+        loop_aware={"flops": la["flops"], "bytes": la["bytes"]},
+        collectives=coll,
+        active_params=n_active,
+        roofline=roof.as_dict(),
+    )
+    return record
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "alias_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def result_path(arch: str, shape: str, mesh: str,
+                variant: str = "baseline") -> Path:
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    return RESULTS_DIR / f"{arch}__{shape}__{mesh}{suffix}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline",
+                    help="named optimization variant (launch/variants.py)")
+    ap.add_argument("--all", action="store_true",
+                    help="drive the full sweep via subprocesses")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from ..configs import INPUT_SHAPES, list_architectures
+        meshes = (["single", "multi"] if args.mesh == "both"
+                  else [args.mesh])
+        pairs = [(a, s, m) for a in list_architectures()
+                 for s in INPUT_SHAPES for m in meshes]
+        for arch, shape, mesh in pairs:
+            out = result_path(arch, shape, mesh)
+            if out.exists() and not args.force:
+                print(f"skip (cached): {arch} {shape} {mesh}")
+                continue
+            print(f"== {arch} × {shape} × {mesh} ==", flush=True)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh]
+            try:
+                rc = subprocess.run(cmd, timeout=args.timeout).returncode
+            except subprocess.TimeoutExpired:
+                out.write_text(json.dumps({
+                    "arch": arch, "shape": shape, "mesh": mesh,
+                    "status": "timeout", "timeout_s": args.timeout}))
+                print("   TIMEOUT")
+                continue
+            if rc != 0 and not out.exists():
+                out.write_text(json.dumps({
+                    "arch": arch, "shape": shape, "mesh": mesh,
+                    "status": "crashed", "returncode": rc}))
+        return
+
+    if not (args.arch and args.shape):
+        ap.error("--arch and --shape required (or --all)")
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for mesh_kind in meshes:
+        out = result_path(args.arch, args.shape, mesh_kind, args.variant)
+        try:
+            record = run_pair(args.arch, args.shape, mesh_kind,
+                              args.variant)
+        except Exception as e:  # record the failure — it's a bug to fix
+            record = {"arch": args.arch, "shape": args.shape,
+                      "mesh": mesh_kind, "variant": args.variant,
+                      "status": "error",
+                      "error": f"{type(e).__name__}: {e}",
+                      "traceback": traceback.format_exc()[-4000:]}
+        out.write_text(json.dumps(record, indent=1))
+        status = record.get("status")
+        if status == "ok":
+            r = record["roofline"]
+            print(f"{args.arch} {args.shape} {mesh_kind} "
+                  f"[{args.variant}]: OK "
+                  f"compute={r['compute_s']:.3e}s "
+                  f"memory={r['memory_s']:.3e}s "
+                  f"collective={r['collective_s']:.3e}s "
+                  f"dominant={r['dominant']} "
+                  f"useful={r['useful_flops_ratio']:.2f} "
+                  f"(lower {record['lower_s']}s, "
+                  f"compile {record['compile_s']}s)")
+            ma = record.get("memory_analysis", {})
+            print("  memory_analysis:", json.dumps(ma))
+            print("  collectives:", json.dumps(record["collectives"]))
+        else:
+            print(f"{args.arch} {args.shape} {mesh_kind}: {status}: "
+                  f"{record.get('reason', record.get('error', ''))}")
+            if record.get("traceback"):
+                print(record["traceback"][-1500:])
+
+
+if __name__ == "__main__":
+    main()

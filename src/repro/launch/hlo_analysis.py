@@ -1,0 +1,405 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips × peak)      [cost_analysis 'flops']
+memory term     = HLO_bytes / (chips × HBM bw)    [cost_analysis 'bytes accessed']
+collective term = wire_bytes / (chips × link bw)  [parsed from HLO text]
+
+cost_analysis() on an SPMD-partitioned executable describes the *per-
+device* module, so terms divide by peak per chip (not × chips).
+
+Collective parsing: we walk the (partitioned) HLO text, attribute each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+to its enclosing computation, multiply ops inside while-loop bodies by the
+loop trip count (recovered from the constant bound in the loop condition —
+lax.scan emits `compare(iv, constant(N)), direction=LT`), and convert
+tensor bytes to wire bytes with ring-algorithm factors.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# wire-bytes multiplier on the (output) tensor size, ring algorithms,
+# n = participants; applied as factor(n) · tensor_bytes
+_WIRE_FACTORS = {
+    "all-gather": lambda n: (n - 1) / n,           # on output size
+    "all-reduce": lambda n: 2 * (n - 1) / n,       # reduce-scatter + gather
+    "reduce-scatter": lambda n: (n - 1) / n,       # on input size
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    shape_bytes: int
+    participants: int
+    computation: str
+    trip_count: int = 1
+
+    @property
+    def wire_bytes(self) -> float:
+        return (_WIRE_FACTORS[self.kind](max(2, self.participants))
+                * self.shape_bytes * self.trip_count)
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _parse_result_bytes(line: str) -> int:
+    """Total bytes of the op's result shape(s) (handles tuple results)."""
+    total = 0
+    # result is the text between '=' and the op name; just scan all shapes
+    # on the left-hand side of the op name occurrence
+    lhs = line.split("=", 1)
+    if len(lhs) < 2:
+        return 0
+    # shapes appear immediately after '=' and before the op name token
+    m = re.match(r"\s*(\(?[^)]*?\)?)\s*(?:" + "|".join(_COLLECTIVES) + r")",
+                 lhs[1])
+    region = m.group(1) if m else lhs[1][:200]
+    for dt, dims in _SHAPE_RE.findall(region):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _replica_group_size(line: str) -> int:
+    """Participants per group from replica_groups={{0,1,..},{..}} or
+    [n,m]<=[...] notation."""
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    """Extract collectives with trip-count attribution."""
+    # 1. split into computations
+    comp_ops = _split_computations(hlo_text)
+
+    # 2. find while loops: body=%comp, condition=%comp; trip counts from
+    # backend_config known_trip_count when present, else the largest int
+    # constant in the condition computation (scan: compare(iv, N), LT)
+    trip_of_body: Dict[str, int] = {}
+    for comp, lines in comp_ops.items():
+        for line in lines:
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            if not (mb and mc):
+                continue
+            mt = re.search(r"known_trip_count[^0-9]*(\d+)", line)
+            if mt:
+                trip_of_body[mb.group(1)] = int(mt.group(1))
+                continue
+            best = 1
+            for cline in comp_ops.get(mc.group(1), []):
+                for c in re.findall(r"constant\((\d+)\)", cline):
+                    best = max(best, int(c))
+            trip_of_body[mb.group(1)] = best
+
+    def trip_count(comp: str) -> int:
+        # nested scans would need transitive multiplication; one level is
+        # what our layer-stack scan produces at the collective sites
+        return trip_of_body.get(comp, 1)
+
+    # 4. collect collective ops
+    ops: List[CollectiveOp] = []
+    for comp, lines in comp_ops.items():
+        for line in lines:
+            for kind in _COLLECTIVES:
+                if re.search(rf"\s{kind}(-start)?\(", line):
+                    nbytes = _parse_result_bytes(line)
+                    if nbytes == 0:
+                        continue
+                    ops.append(CollectiveOp(
+                        kind=kind, shape_bytes=nbytes,
+                        participants=_replica_group_size(line),
+                        computation=comp, trip_count=trip_count(comp)))
+                    break
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, float]:
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for op in ops:
+        out[op.kind] += op.wire_bytes
+    out["total_wire_bytes"] = sum(out[k] for k in _COLLECTIVES)
+    out["n_ops"] = len(ops)
+    return out
+
+
+# ------------------------------------------------------- loop-aware costs
+# XLA:CPU cost_analysis() counts each computation ONCE — while-loop bodies
+# (lax.scan over layers) are not multiplied by trip count (verified by a
+# scan-vs-unroll control: scan flops = exactly 1/N of unrolled).  We
+# therefore re-derive flops/bytes from the optimized HLO text ourselves,
+# multiplying every computation by the product of enclosing loop trip
+# counts.  Flops: dot ops (matmul-dominated workloads). Bytes: operand +
+# result bytes at fusion boundaries (ops inside fused computations are
+# register/VMEM-resident and not charged).
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comp_ops: Dict[str, List[str]] = {}
+    current = "<module>"
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line)
+        if m:
+            current = m.group(1)
+            comp_ops.setdefault(current, [])
+            continue
+        comp_ops.setdefault(current, []).append(line)
+    return comp_ops
+
+
+def _comp_multipliers(comp_ops: Dict[str, List[str]]) -> Dict[str, float]:
+    """multiplier(comp) = Σ_callsites mult(parent) · trip_factor."""
+    # edges: parent -> (child, trip_factor)
+    edges: Dict[str, List] = {}
+    trip_cache: Dict[str, int] = {}
+
+    def cond_trip(line: str, cond: str) -> int:
+        mt = re.search(r"known_trip_count[^0-9]*(\d+)", line)
+        if mt:
+            return int(mt.group(1))
+        best = 1
+        for cline in comp_ops.get(cond, []):
+            for c in re.findall(r"constant\((\d+)\)", cline):
+                best = max(best, int(c))
+        return best
+
+    for comp, lines in comp_ops.items():
+        for line in lines:
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            if mb and mc:
+                t = cond_trip(line, mc.group(1))
+                trip_cache[mb.group(1)] = t
+                edges.setdefault(comp, []).append((mb.group(1), t))
+                edges.setdefault(comp, []).append((mc.group(1), t))
+                continue
+            for ref in re.findall(
+                    r"(?:calls|to_apply|branch_computations)="
+                    r"[{]?%?([\w\.\-{}, %]+)", line):
+                for child in re.findall(r"[\w\.\-]+", ref):
+                    edges.setdefault(comp, []).append((child, 1))
+
+    mult: Dict[str, float] = {}
+
+    entry = None
+    for comp in comp_ops:
+        if comp == "<module>":
+            continue
+        if entry is None:
+            entry = comp
+    # computations with no incoming edge are roots (entry); others resolved
+    # by propagation. Iterate to fixpoint (call graph is a DAG in HLO).
+    incoming: Dict[str, List] = {}
+    for parent, outs in edges.items():
+        for child, t in outs:
+            incoming.setdefault(child, []).append((parent, t))
+    all_comps = [c for c in comp_ops if c != "<module>"]
+    for c in all_comps:
+        if c not in incoming:
+            mult[c] = 1.0
+    for _ in range(len(all_comps) + 2):
+        changed = False
+        for c in all_comps:
+            if c not in incoming:
+                continue
+            val = 0.0
+            ok = True
+            for parent, t in incoming[c]:
+                if parent not in mult:
+                    ok = False
+                    break
+                val += mult[parent] * t
+            if ok and (c not in mult or abs(mult[c] - val) > 1e-9):
+                mult[c] = val
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def loop_aware_costs(hlo_text: str) -> Dict[str, float]:
+    """Returns {'flops': ..., 'bytes': ...} with while-body multiplication.
+
+    flops: 2 · |result| · |contracted| per dot (matmul-dominated models);
+    bytes: result + operand bytes at fusion boundaries (ops inside fused
+    computations are register/VMEM-resident and not charged).
+    """
+    comp_ops = _split_computations(hlo_text)
+    mult = _comp_multipliers(comp_ops)
+
+    # global name -> (dims list, dtype bytes); HLO names are module-unique
+    shapes: Dict[str, tuple] = {}
+    for lines in comp_ops.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m and m.group(2) in _DTYPE_BYTES:
+                dims = [int(x) for x in m.group(3).split(",") if x]
+                shapes[m.group(1)] = (dims, _DTYPE_BYTES[m.group(2)])
+
+    def nbytes(name: str) -> int:
+        if name not in shapes:
+            return 0
+        dims, b = shapes[name]
+        n = b
+        for d in dims:
+            n *= d
+        return n
+
+    flops = 0.0
+    bytes_ = 0.0
+    for comp, lines in comp_ops.items():
+        if comp == "<module>":
+            continue
+        k = mult.get(comp, 1.0)
+        fused = "fused" in comp
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            _, dt, dims_s = m.group(1), m.group(2), m.group(3)
+            if re.search(r"\bdot\(", line):  # flops incl. fused comps
+                out_elems = _shape_elems(dims_s)
+                contract = 1
+                mlhs = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                mop = re.search(r"dot\(\s*%?([\w\.\-]+)", line)
+                if mlhs and mop and mop.group(1) in shapes:
+                    lhs_dims = shapes[mop.group(1)][0]
+                    for di in (int(x) for x in mlhs.group(1).split(",")
+                               if x):
+                        if di < len(lhs_dims):
+                            contract *= lhs_dims[di]
+                flops += k * 2.0 * out_elems * max(1, contract)
+            if fused:
+                continue
+            if dt in _DTYPE_BYTES and not re.search(
+                    r"\b(parameter|constant|get-tuple-element|tuple|"
+                    r"bitcast|copy-done|after-all)\b", line):
+                out_b = _shape_elems(dims_s) * _DTYPE_BYTES[dt]
+                refs = re.findall(r"%([\w\.\-]+)", line)[1:]
+                opnd_b = sum(nbytes(r) for r in refs)
+                bytes_ += k * (out_b + opnd_b)
+    return {"flops": flops, "bytes": bytes_}
+
+
+# -------------------------------------------------------------- roofline
+@dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    wire_bytes: float            # per-device collective wire bytes
+    model_flops: float           # analytic useful flops (global)
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips × per-device HLO flops)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "wire_bytes_per_device": self.wire_bytes,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops(cfg, shape, n_params_active: int) -> float:
+    """Analytic 'useful' flops: 6·N·D train, 2·N·D inference."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params_active * shape.global_batch
+
+
+def active_param_count(cfg) -> int:
+    """Params touched per token (MoE: top_k of E experts)."""
+    from ..models.config import param_count
+    total = param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    expert_params = 3 * cfg.d_model * cfg.d_ff      # per expert, per block
+    layer_positions = [i for i, k in enumerate(cfg.pattern)
+                       if k != "shared_attn"]
+    n_moe_blocks = sum(
+        1 for li in range(cfg.n_layers)
+        if cfg.use_moe(layer_positions[li % len(layer_positions)]))
+    inactive = (cfg.n_experts - cfg.top_k) * expert_params * n_moe_blocks
+    return total - inactive

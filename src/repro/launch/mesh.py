@@ -1,0 +1,27 @@
+"""Production mesh definition (TPU v5e pods).
+
+single-pod : (16, 16)    axes ("data", "model")        = 256 chips
+multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init,
+while smoke tests see the 1 real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1, data: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — used by tests."""
+    n = len(jax.devices())
+    model = min(model, n)
+    data = max(1, min(data, n // model))
+    return jax.make_mesh((data, model), ("data", "model"))

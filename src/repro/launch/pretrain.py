@@ -1,0 +1,109 @@
+"""Datacenter-style pjit pretraining driver.
+
+Runs the real distributed train step (the same one the dry-run lowers at
+512 devices) on the host mesh with actual data, checkpointing, and a
+cosine LR schedule — the end-to-end training path of deliverable (b).
+On this CPU container use a reduced arch; on TPU point it at a full
+config and the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.pretrain --arch mamba2-130m \
+      --reduced --steps 100 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs import get_config
+from ..data.synthetic import make_token_lm
+from ..models import make_train_step
+from ..sharding import batch_specs, opt_specs, param_specs, to_named
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 mesh (requires 256 devices)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.replace(learning_rate=args.lr, efficient_ce=True)
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+
+    train_step, init_state = make_train_step(cfg)
+    rng = jax.random.PRNGKey(0)
+
+    with mesh:
+        state_struct = jax.eval_shape(lambda: init_state(rng))
+        p_specs = param_specs(state_struct["params"], mesh)
+        o_specs = opt_specs(state_struct["opt"], p_specs, mesh)
+        state_specs = {"params": p_specs, "opt": o_specs}
+        state_sh = to_named(state_specs, mesh)
+
+        jit_init = jax.jit(init_state, out_shardings=state_sh)
+        state = jit_init(rng)
+
+        dummy_batch = {
+            "tokens": jnp.zeros((args.batch, args.seq), jnp.int32),
+            "labels": jnp.zeros((args.batch, args.seq), jnp.int32)}
+        b_specs = batch_specs(dummy_batch, mesh)
+        jit_step = jax.jit(train_step,
+                           in_shardings=(state_sh, to_named(b_specs, mesh)),
+                           out_shardings=(state_sh, None),
+                           donate_argnums=(0,))
+
+        data = make_token_lm(args.steps * args.batch * (args.seq + 1) * 2,
+                             vocab=cfg.vocab, seq_len=args.seq, seed=0)
+        n_seq = data.x.shape[0]
+
+        ckpt = (CheckpointManager(args.ckpt_dir)
+                if args.ckpt_dir else None)
+        losses = []
+        t0 = time.time()
+        for step in range(args.steps):
+            idx = (np.arange(args.batch) + step * args.batch) % n_seq
+            batch = {"tokens": jnp.asarray(data.x[idx]),
+                     "labels": jnp.asarray(data.y[idx])}
+            state, loss = jit_step(state, batch)
+            losses.append(float(loss))
+            if (step + 1) % args.log_every == 0:
+                rate = (step + 1) * args.batch * args.seq / (
+                    time.time() - t0)
+                print(f"step {step+1:5d} loss {losses[-1]:.4f} "
+                      f"(mean10 {np.mean(losses[-10:]):.4f}) "
+                      f"{rate:,.0f} tok/s")
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(state, step + 1)
+
+        print(f"\nfinal: loss {losses[-1]:.4f} "
+              f"(first10 {np.mean(losses[:10]):.4f} → "
+              f"last10 {np.mean(losses[-10:]):.4f}) "
+              f"in {time.time()-t0:.1f}s")
+        if ckpt:
+            ckpt.save(state, args.steps)
+            print(f"checkpoints: {sorted(ckpt.steps())} in {ckpt.dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""input_specs() + step builders for the dry-run.
+
+Every model input is a jax.ShapeDtypeStruct (weak-type-correct, shardable,
+no device allocation); parameter/optimizer/cache structures come from
+jax.eval_shape over the real init functions, so the dry-run lowers exactly
+the production step functions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.shapes import InputShape
+from ..models import decode_step, init_cache, make_train_step, prefill
+from ..models.config import ArchConfig
+from ..sharding import (batch_specs, cache_specs, data_axes, opt_specs,
+                        param_specs, to_named)
+from ..sharding.rules import DEFAULT_OPTIONS, ShardingOptions
+
+Pytree = Any
+
+
+def resolve_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """long_500k runs the long-context variant (attn → sliding window)."""
+    if shape.name == "long_500k":
+        return cfg.long_context()
+    return cfg
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the batch of a train/prefill step."""
+    B, S = shape.global_batch, shape.seq_len
+    tok_shape = (B, cfg.n_codebooks, S) if cfg.n_codebooks else (B, S)
+    batch = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+    if cfg.n_patches:
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, shape: InputShape) -> Tuple:
+    """(cache, tokens, pos) ShapeDtypeStructs for a serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S, jnp.bfloat16))
+    tok_shape = (B, cfg.n_codebooks, 1) if cfg.n_codebooks else (B, 1)
+    tokens = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return cache, tokens, pos
+
+
+def _logits_struct_spec(struct, mesh: Mesh) -> P:
+    """Logits (B, S, V): batch over data axes, vocab over model when
+    divisible."""
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+    shape = struct.shape
+    spec = [None] * len(shape)
+    if shape[0] % dsize == 0:
+        spec[0] = dspec
+    if shape[-1] % mesh.shape["model"] == 0:
+        spec[-1] = "model"
+    return P(*spec)
+
+
+def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                     opts: ShardingOptions = DEFAULT_OPTIONS):
+    """Returns (jitted_fn, example_args) ready for .lower()."""
+    train_step, init_state = make_train_step(cfg)
+    state_struct = jax.eval_shape(
+        lambda: init_state(jax.random.PRNGKey(0)))
+    batch = input_specs(cfg, shape)
+
+    p_specs = param_specs(state_struct["params"], mesh, opts)
+    o_specs = opt_specs(state_struct["opt"], p_specs, mesh, opts)
+    state_specs = {"params": p_specs, "opt": o_specs}
+    b_specs = batch_specs(batch, mesh, opts)
+
+    jf = jax.jit(
+        train_step,
+        in_shardings=(to_named(state_specs, mesh), to_named(b_specs, mesh)),
+        out_shardings=(to_named(state_specs, mesh),
+                       NamedSharding(mesh, P())),
+        donate_argnums=(0,))
+    return jf, (state_struct, batch)
+
+
+def build_prefill_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                       opts: ShardingOptions = DEFAULT_OPTIONS):
+    from ..models import init_params as _init_params
+    params_struct = jax.eval_shape(
+        lambda: _init_params(cfg, jax.random.PRNGKey(0)))
+    batch = input_specs(cfg, shape)
+
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch)
+
+    out_struct = jax.eval_shape(prefill_step, params_struct, batch)
+    logits_spec = _logits_struct_spec(out_struct[0], mesh)
+    c_specs = cache_specs(out_struct[1], mesh, opts)
+
+    jf = jax.jit(
+        prefill_step,
+        in_shardings=(to_named(param_specs(params_struct, mesh, opts), mesh),
+                      to_named(batch_specs(batch, mesh, opts), mesh)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       to_named(c_specs, mesh)))
+    return jf, (params_struct, batch)
+
+
+def build_decode_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                      opts: ShardingOptions = DEFAULT_OPTIONS):
+    from ..models import init_params as _init_params
+    params_struct = jax.eval_shape(
+        lambda: _init_params(cfg, jax.random.PRNGKey(0)))
+    cache, tokens, pos = decode_input_specs(cfg, shape)
+
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(cfg, params, cache, tokens, pos)
+
+    out_struct = jax.eval_shape(serve_step, params_struct, cache, tokens, pos)
+    logits_spec = _logits_struct_spec(out_struct[0], mesh)
+    c_specs = cache_specs(cache, mesh, opts)
+
+    jf = jax.jit(
+        serve_step,
+        in_shardings=(to_named(param_specs(params_struct, mesh, opts), mesh),
+                      to_named(c_specs, mesh),
+                      to_named(batch_specs(tokens, mesh, opts), mesh),
+                      to_named(batch_specs(pos, mesh, opts), mesh)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       to_named(cache_specs(out_struct[1], mesh, opts),
+                                mesh)),
+        donate_argnums=(1,))
+    return jf, (params_struct, cache, tokens, pos)
+
+
+def build_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+               opts: ShardingOptions = DEFAULT_OPTIONS):
+    cfg = resolve_config(cfg, shape)
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, opts)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, opts)
+    return build_decode_step(cfg, shape, mesh, opts)

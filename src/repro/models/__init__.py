@@ -1,0 +1,8 @@
+from .config import ArchConfig, param_count
+from .transformer import (decode_step, forward, init_cache, init_params,
+                          loss_fn, make_train_step, prefill,
+                          warm_cross_caches)
+
+__all__ = ["ArchConfig", "param_count", "decode_step", "forward",
+           "init_cache", "init_params", "loss_fn", "make_train_step",
+           "prefill", "warm_cross_caches"]

@@ -1,0 +1,245 @@
+"""GQA attention: full/sliding-window causal (train & prefill), cross
+attention (VLM), and single-token decode against a KV cache.
+
+Layouts (head dims kept explicit so sharding rules can target them):
+  wq: (D, H, hd)   wk/wv: (D, K, hd)   wo: (H, hd, D)
+  KV cache: (B, K, S_cache, hd); window layers use a ring buffer.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import apply_rope, he_init, softcap
+
+Pytree = Any
+
+NEG_INF = -2.3819763e38  # large negative for masking in fp32
+
+
+def attn_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> Pytree:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 4)
+    return {"wq": he_init(ks[0], (D, H, hd), D, dtype),
+            "wk": he_init(ks[1], (D, K, hd), D, dtype),
+            "wv": he_init(ks[2], (D, K, hd), D, dtype),
+            "wo": he_init(ks[3], (H, hd, D), H * hd, dtype)}
+
+
+def _qkv(p: Pytree, x: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    return q, k, v
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """q: (B,Sq,H,hd), k: (B,Sk,K,hd) → scores (B,K,G,Sq,Sk), G=H/K."""
+    B, Sq, H, hd = q.shape
+    qg = q.reshape(B, Sq, n_kv, H // n_kv, hd)
+    return jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+
+
+def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """probs: (B,K,G,Sq,Sk), v: (B,Sk,K,hd) → (B,Sq,H,hd)."""
+    B, K, G, Sq, _ = probs.shape
+    o = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return o.reshape(B, Sq, K * G, v.shape[-1])
+
+
+def _causal_window_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                        window: Optional[int]) -> jnp.ndarray:
+    """(Sq, Sk) boolean mask: True = attend."""
+    m = q_pos[:, None] >= k_pos[None, :]
+    if window:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def _softmax(scores: jnp.ndarray, mask: jnp.ndarray,
+             cap: float, fp32: bool = True) -> jnp.ndarray:
+    if fp32:
+        s = softcap(scores.astype(jnp.float32), cap)
+        s = jnp.where(mask, s, NEG_INF)
+        return jax.nn.softmax(s, axis=-1)
+    # bf16 softmax path (§Perf): halves the (B,K,G,Sq,Sk) tensor traffic;
+    # max-subtraction keeps it stable, mask value fits bf16 range
+    s = softcap(scores, cap)
+    s = jnp.where(mask, s, jnp.asarray(-3e38, s.dtype))
+    m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+# --------------------------------------------------------------- full seq
+def self_attention(p: Pytree, x: jnp.ndarray, positions: jnp.ndarray,
+                   cfg: ArchConfig, window: Optional[int] = None,
+                   q_chunk: int = 1024, return_kv: bool = False):
+    """Causal (optionally windowed) self-attention over a full sequence.
+
+    For long sequences the query dimension is processed in chunks via
+    lax.scan — the pure-jnp analogue of the Pallas flash kernel: live
+    buffers stay O(q_chunk · S) instead of O(S²).
+    """
+    B, S, D = x.shape
+    q, k, v = _qkv(p, x)
+    q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+
+    if cfg.use_pallas_attention:
+        # Pallas flash kernel path (TPU target): (B,S,H,hd) → (B,H,S,hd)
+        from ..kernels import flash_attention as _flash
+        o = _flash(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                   jnp.swapaxes(v, 1, 2), causal=True, window=window,
+                   softcap=cfg.attn_logit_softcap)
+        o = jnp.swapaxes(o, 1, 2).astype(x.dtype)
+    elif S <= q_chunk:
+        mask = _causal_window_mask(positions[0], positions[0], window)
+        probs = _softmax(_gqa_scores(q, k, cfg.n_kv_heads), mask,
+                         cfg.attn_logit_softcap,
+                         cfg.attn_fp32_softmax).astype(x.dtype)
+        o = _gqa_out(probs, v)
+    else:
+        n_chunks = S // q_chunk
+        assert S % q_chunk == 0, f"seq {S} not divisible by q_chunk {q_chunk}"
+        qs = q.reshape(B, n_chunks, q_chunk, *q.shape[2:])
+        pos = positions[0].reshape(n_chunks, q_chunk)
+
+        def body(_, inp):
+            q_c, pos_c = inp
+            mask = _causal_window_mask(pos_c, positions[0], window)
+            pr = _softmax(_gqa_scores(q_c, k, cfg.n_kv_heads), mask,
+                          cfg.attn_logit_softcap,
+                          cfg.attn_fp32_softmax).astype(x.dtype)
+            return None, _gqa_out(pr, v)
+
+        _, o = jax.lax.scan(body, None,
+                            (jnp.moveaxis(qs, 1, 0), pos))
+        o = jnp.moveaxis(o, 0, 1).reshape(B, S, q.shape[2], q.shape[3])
+
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def kv_to_cache(k: jnp.ndarray, v: jnp.ndarray, window: Optional[int],
+                dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Convert prefill (B, S, K, hd) roped keys/values into the decode
+    cache layout (B, K, S_cache, hd).  Window layers keep the last
+    `window` entries arranged by ring-buffer slot (t % window) so decode
+    can continue writing at position S."""
+    B, S, K, hd = k.shape
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if window and S > window:
+        slots = jnp.arange(window)
+        # slot i holds the largest t < S with t % window == i
+        t = (S - 1) - ((S - 1 - slots) % window)
+        kt = kt[:, :, t, :]
+        vt = vt[:, :, t, :]
+    elif window and S <= window:
+        pad = window - S
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return kt.astype(dtype), vt.astype(dtype)
+
+
+# --------------------------------------------------------------- cross
+def cross_attention(p: Pytree, x: jnp.ndarray,
+                    kv_feats: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Text queries attend over (unmasked) vision features (B, P, D)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bpd,dhk->bphk", kv_feats, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bpd,dhk->bphk", kv_feats, p["wv"].astype(x.dtype))
+    scores = _gqa_scores(q, k, cfg.n_kv_heads)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = _gqa_out(probs, v)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+# --------------------------------------------------------------- decode
+def init_kv_cache(cfg: ArchConfig, batch: int, length: int,
+                  dtype=jnp.bfloat16) -> Pytree:
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return {"k": jnp.zeros((batch, K, length, hd), dtype),
+            "v": jnp.zeros((batch, K, length, hd), dtype)}
+
+
+def decode_self_attention(p: Pytree, x: jnp.ndarray, cache: Pytree,
+                          pos: jnp.ndarray, cfg: ArchConfig,
+                          window: Optional[int] = None
+                          ) -> Tuple[jnp.ndarray, Pytree]:
+    """One-token decode. x: (B, 1, D); pos: (B,) current positions.
+
+    Full-attention layers use a cache of the full context; window layers a
+    ring buffer of size `window` (keys are roped at absolute positions
+    before caching, so the ring wrap is transparent).
+    """
+    B = x.shape[0]
+    S_cache = cache["k"].shape[2]
+    q, k_new, v_new = _qkv(p, x)
+    q = apply_rope(q, pos[:, None], cfg.rope_fraction, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], cfg.rope_fraction, cfg.rope_theta)
+
+    slot = (pos % S_cache) if window else jnp.minimum(pos, S_cache - 1)
+    # scatter the new kv at each batch row's slot
+    k_cache = _scatter_time(cache["k"], k_new.astype(cache["k"].dtype), slot)
+    v_cache = _scatter_time(cache["v"], v_new.astype(cache["v"].dtype), slot)
+
+    scores = _gqa_scores(q, jnp.swapaxes(k_cache, 1, 2).astype(x.dtype),
+                         cfg.n_kv_heads)                     # (B,K,G,1,S)
+    idx = jnp.arange(S_cache)
+    if window:
+        # ring buffer: a slot is valid if written within the last `window`
+        # steps, i.e. slot index corresponds to some t in (pos-window, pos]
+        valid = _ring_valid(idx, pos, S_cache)               # (B, S)
+    else:
+        valid = idx[None, :] <= pos[:, None]
+    mask = valid[:, None, None, None, :]
+    s = softcap(scores.astype(jnp.float32), cfg.attn_logit_softcap)
+    s = jnp.where(mask, s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = _gqa_out(probs, jnp.swapaxes(v_cache, 1, 2).astype(x.dtype))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _scatter_time(cache: jnp.ndarray, new: jnp.ndarray,
+                  slot: jnp.ndarray) -> jnp.ndarray:
+    """cache (B,K,S,hd) ← new (B,1,K,hd) at per-row time index slot (B,)."""
+    S = cache.shape[2]
+    onehot = jax.nn.one_hot(slot, S, dtype=cache.dtype)      # (B, S)
+    newt = jnp.swapaxes(new, 1, 2)                            # (B,K,1,hd)
+    return cache * (1 - onehot[:, None, :, None]) + \
+        newt * onehot[:, None, :, None]
+
+
+def _ring_valid(idx: jnp.ndarray, pos: jnp.ndarray, S: int) -> jnp.ndarray:
+    """Valid slots of a ring buffer of size S after writing position pos."""
+    # slot i currently holds time t(i) = the largest t ≤ pos with t % S == i
+    p = pos[:, None]
+    t = p - ((p - idx[None, :]) % S)
+    return (t >= 0) & (t >= p - S + 1)
+
+
+def init_cross_cache(p: Pytree, kv_feats: jnp.ndarray,
+                     dtype=jnp.bfloat16) -> Pytree:
+    """Precompute cross-attention K/V from vision features once."""
+    k = jnp.einsum("bpd,dhk->bphk", kv_feats, p["wk"].astype(kv_feats.dtype))
+    v = jnp.einsum("bpd,dhk->bphk", kv_feats, p["wv"].astype(kv_feats.dtype))
+    return {"ck": k.astype(dtype), "cv": v.astype(dtype)}
+
+
+def decode_cross_attention(p: Pytree, x: jnp.ndarray, cross_cache: Pytree,
+                           cfg: ArchConfig) -> jnp.ndarray:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = cross_cache["ck"].astype(x.dtype)
+    v = cross_cache["cv"].astype(x.dtype)
+    scores = _gqa_scores(q, k, cfg.n_kv_heads)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = _gqa_out(probs, v)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))

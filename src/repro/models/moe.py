@@ -1,0 +1,117 @@
+"""Mixture-of-Experts block: top-k routing with capacity-based dispatch.
+
+TPU-idiomatic (einsum one-hot dispatch → dense expert matmuls, experts
+sharded over the `model` mesh axis so the dispatch einsums lower to
+all-to-all-style collectives).  Tokens are processed in groups via
+lax.scan so the (g, E, C) dispatch tensor stays bounded regardless of
+global token count.
+
+Covers: llama4-maverick (128e top-1 + shared dense expert) and
+arctic (128e top-2 + parallel dense-residual FFN) via
+`cfg.parallel_dense_mlp`.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import gated_mlp, gated_mlp_init, he_init
+
+Pytree = Any
+
+
+def moe_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> Pytree:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 5)
+    p = {"router": he_init(ks[0], (D, E), D, jnp.float32),  # router in fp32
+         "wg": he_init(ks[1], (E, D, F), D, dtype),
+         "wu": he_init(ks[2], (E, D, F), D, dtype),
+         "wd": he_init(ks[3], (E, F, D), F, dtype)}
+    if cfg.parallel_dense_mlp:
+        p["dense"] = gated_mlp_init(ks[4], D, F, dtype)
+    return p
+
+
+def _capacity(group: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(group * top_k / n_experts * factor)
+    return max(1, c)
+
+
+def _dispatch_combine(logits: jnp.ndarray, top_k: int,
+                      capacity: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build (g,E,C) dispatch/combine tensors from router logits (g,E)."""
+    g, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(probs, top_k)            # (g, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    dispatch = jnp.zeros((g, E, capacity), jnp.float32)
+    combine = jnp.zeros((g, E, capacity), jnp.float32)
+    # fill per routing choice; running per-expert occupancy across choices
+    occupancy = jnp.zeros((E,), jnp.int32)
+    for choice in range(top_k):
+        e = topi[:, choice]                              # (g,)
+        w = topv[:, choice]
+        mask_e = jax.nn.one_hot(e, E, dtype=jnp.int32)   # (g, E)
+        pos = jnp.cumsum(mask_e, axis=0) - 1 + occupancy[None, :]
+        occupancy = occupancy + mask_e.sum(axis=0)
+        pos_tok = jnp.take_along_axis(pos, e[:, None], axis=1)[:, 0]
+        keep = pos_tok < capacity
+        oh_e = jax.nn.one_hot(e, E, dtype=jnp.float32)
+        oh_c = jax.nn.one_hot(jnp.where(keep, pos_tok, capacity),
+                              capacity, dtype=jnp.float32)
+        d = oh_e[:, :, None] * oh_c[:, None, :]
+        dispatch = dispatch + d
+        combine = combine + d * w[:, None, None]
+    return dispatch, combine
+
+
+def moe_block(p: Pytree, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """x: (B, S, D) → (B, S, D). Token groups scanned; experts dense."""
+    B, S, D = x.shape
+    T = B * S
+    flat = x.reshape(T, D)
+    g = min(cfg.moe_group_size, T)
+    # pad so group count divides
+    n_groups = -(-T // g)
+    pad = n_groups * g - T
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad, D), flat.dtype)])
+    grouped = flat.reshape(n_groups, g, D)
+    capacity = _capacity(g, cfg.top_k, cfg.n_experts, cfg.capacity_factor)
+
+    router = p["router"].astype(jnp.float32)
+
+    def per_group(_, xg):
+        logits = xg.astype(jnp.float32) @ router              # (g, E)
+        dispatch, combine = _dispatch_combine(logits, cfg.top_k, capacity)
+        dispatch = dispatch.astype(xg.dtype)
+        expert_in = jnp.einsum("gec,gd->ecd", dispatch, xg)
+        a = jnp.einsum("ecd,edf->ecf", expert_in, p["wg"].astype(xg.dtype))
+        u = jnp.einsum("ecd,edf->ecf", expert_in, p["wu"].astype(xg.dtype))
+        h = (jax.nn.silu(a) if cfg.act == "silu" else jax.nn.gelu(a)) * u
+        expert_out = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(xg.dtype))
+        yg = jnp.einsum("gec,ecd->gd", combine.astype(xg.dtype), expert_out)
+        return None, yg
+
+    if n_groups == 1:
+        _, y = per_group(None, grouped[0])
+        y = y[None]
+    else:
+        _, y = jax.lax.scan(per_group, None, grouped)
+    y = y.reshape(n_groups * g, D)[:T].reshape(B, S, D)
+
+    if cfg.parallel_dense_mlp:
+        y = y + gated_mlp(p["dense"], x, cfg.act)
+    return y
+
+
+def router_load(p: Pytree, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Per-expert token counts (diagnostics / load-balance tests)."""
+    logits = x.reshape(-1, x.shape[-1]).astype(jnp.float32) @ \
+        p["router"].astype(jnp.float32)
+    _, topi = jax.lax.top_k(logits, cfg.top_k)
+    return jnp.bincount(topi.reshape(-1), length=cfg.n_experts)

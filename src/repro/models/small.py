@@ -1,0 +1,175 @@
+"""The paper's client model architectures (§VI-A2), from scratch in JAX.
+
+- MNIST:    2×[conv5x5 + maxpool2x2] → FC(512) → FC(10)
+- FEMNIST:  2×[conv5x5 + maxpool2x2] → FC(2048) → FC(62)
+- Shakespeare: embed(8) → 2×LSTM(256) → FC(82)
+- Speech:   2×[conv3x3, conv3x3, maxpool, dropout(.25)] → avgpool → FC(35)
+
+Functional (init, apply) pairs; params are plain dict pytrees.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Pytree = Any
+
+
+class ModelDef(NamedTuple):
+    init: Callable[..., Pytree]
+    apply: Callable[..., jnp.ndarray]
+    name: str
+
+
+# ---------------------------------------------------------------- helpers
+def _dense_init(rng, n_in, n_out):
+    k1, _ = jax.random.split(rng)
+    scale = jnp.sqrt(2.0 / n_in)
+    return {"w": jax.random.normal(k1, (n_in, n_out)) * scale,
+            "b": jnp.zeros((n_out,))}
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    scale = jnp.sqrt(2.0 / (kh * kw * cin))
+    return {"w": jax.random.normal(rng, (kh, kw, cin, cout)) * scale,
+            "b": jnp.zeros((cout,))}
+
+
+def _conv(p, x):  # NHWC, SAME padding
+    y = lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool(x, k=2):
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, k, k, 1),
+                             (1, k, k, 1), "VALID")
+
+
+# ---------------------------------------------------------------- CNNs
+def make_cnn(image_size: int = 28, channels: int = 1, n_classes: int = 10,
+             fc_width: int = 512, name: str = "mnist_cnn") -> ModelDef:
+    """The paper's LEAF-style 2-layer 5x5 CNN (MNIST: fc=512/10 classes,
+    FEMNIST: fc=2048/62 classes)."""
+    pooled = image_size // 4  # two 2x2 maxpools
+
+    def init(rng):
+        ks = jax.random.split(rng, 4)
+        return {
+            "conv1": _conv_init(ks[0], 5, 5, channels, 32),
+            "conv2": _conv_init(ks[1], 5, 5, 32, 64),
+            "fc1": _dense_init(ks[2], pooled * pooled * 64, fc_width),
+            "out": _dense_init(ks[3], fc_width, n_classes),
+        }
+
+    def apply(params, x):
+        h = jax.nn.relu(_conv(params["conv1"], x))
+        h = _maxpool(h)
+        h = jax.nn.relu(_conv(params["conv2"], h))
+        h = _maxpool(h)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(_dense(params["fc1"], h))
+        return _dense(params["out"], h)
+
+    return ModelDef(init, apply, name)
+
+
+# ---------------------------------------------------------------- LSTM
+def _lstm_init(rng, n_in, hidden):
+    k1, k2 = jax.random.split(rng)
+    s_in = jnp.sqrt(1.0 / n_in)
+    s_h = jnp.sqrt(1.0 / hidden)
+    return {"wx": jax.random.normal(k1, (n_in, 4 * hidden)) * s_in,
+            "wh": jax.random.normal(k2, (hidden, 4 * hidden)) * s_h,
+            "b": jnp.zeros((4 * hidden,))}
+
+
+def _lstm_scan(p, xs):
+    """xs: (B, T, n_in) → outputs (B, T, hidden)."""
+    hidden = p["wh"].shape[0]
+    B = xs.shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        gates = x_t @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((B, hidden), xs.dtype), jnp.zeros((B, hidden), xs.dtype))
+    (_, _), out = lax.scan(step, init, jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(out, 0, 1)
+
+
+def make_char_lstm(vocab: int = 82, embed: int = 8,
+                   hidden: int = 256, name: str = "shakespeare_lstm") -> ModelDef:
+    """embed(8) → LSTM(256) ×2 → FC(vocab): predict next char from 80 chars."""
+
+    def init(rng):
+        ks = jax.random.split(rng, 4)
+        return {
+            "embed": jax.random.normal(ks[0], (vocab, embed)) * 0.1,
+            "lstm1": _lstm_init(ks[1], embed, hidden),
+            "lstm2": _lstm_init(ks[2], hidden, hidden),
+            "out": _dense_init(ks[3], hidden, vocab),
+        }
+
+    def apply(params, tokens):  # (B, T) int32 → (B, vocab)
+        h = params["embed"][tokens]
+        h = _lstm_scan(params["lstm1"], h)
+        h = _lstm_scan(params["lstm2"], h)
+        return _dense(params["out"], h[:, -1, :])
+
+    return ModelDef(init, apply, name)
+
+
+# ---------------------------------------------------------------- speech
+def make_speech_cnn(frames: int = 32, mels: int = 32, n_classes: int = 35,
+                    name: str = "speech_cnn") -> ModelDef:
+    """Paper §VI-A2: two blocks of [conv3x3, conv3x3, maxpool, dropout] →
+    average pool → FC(35).  Dropout is inference-scaled (applied only when
+    a dropout rng is passed)."""
+
+    def init(rng):
+        ks = jax.random.split(rng, 5)
+        return {
+            "c1a": _conv_init(ks[0], 3, 3, 1, 32),
+            "c1b": _conv_init(ks[1], 3, 3, 32, 32),
+            "c2a": _conv_init(ks[2], 3, 3, 32, 64),
+            "c2b": _conv_init(ks[3], 3, 3, 64, 64),
+            "out": _dense_init(ks[4], 64, n_classes),
+        }
+
+    def apply(params, x, *, dropout_rng=None, rate: float = 0.25):
+        def block(h, pa, pb):
+            h = jax.nn.relu(_conv(pa, h))
+            h = jax.nn.relu(_conv(pb, h))
+            h = _maxpool(h)
+            if dropout_rng is not None:
+                keep = jax.random.bernoulli(dropout_rng, 1 - rate, h.shape)
+                h = jnp.where(keep, h / (1 - rate), 0.0)
+            return h
+
+        h = block(x, params["c1a"], params["c1b"])
+        h = block(h, params["c2a"], params["c2b"])
+        h = h.mean(axis=(1, 2))  # global average pool
+        return _dense(params["out"], h)
+
+    return ModelDef(init, apply, name)
+
+
+SMALL_MODELS = {
+    "mnist_cnn": lambda: make_cnn(28, 1, 10, 512, "mnist_cnn"),
+    "femnist_cnn": lambda: make_cnn(28, 1, 62, 2048, "femnist_cnn"),
+    "shakespeare_lstm": lambda: make_char_lstm(),
+    "speech_cnn": lambda: make_speech_cnn(),
+}

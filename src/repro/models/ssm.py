@@ -1,0 +1,216 @@
+"""Mamba2 block — SSD (state-space duality) with chunked scan.
+
+Faithful to Dao & Gu 2024 (arXiv:2405.21060): scalar-per-head A, depthwise
+causal conv on (x, B, C), softplus dt, gated RMSNorm, chunked SSD that
+computes intra-chunk terms as masked matmuls (MXU-friendly on TPU) and
+carries inter-chunk states with lax.scan.  Decode is the O(1) recurrence
+  h ← exp(A·dt)·h + dt·B⊗x ;  y = C·h + D·x.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import he_init, rms_norm
+
+Pytree = Any
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N          # conv over (x, B, C); one group
+    d_in_proj = 2 * d_inner + 2 * N + H  # z, x, B, C, dt
+    return d_inner, H, P, N, conv_dim, d_in_proj
+
+
+def mamba_init(rng, cfg: ArchConfig, dtype=jnp.float32) -> Pytree:
+    D = cfg.d_model
+    d_inner, H, P, N, conv_dim, d_in_proj = _dims(cfg)
+    ks = jax.random.split(rng, 5)
+    dt = jnp.exp(jax.random.uniform(ks[3], (H,)) *
+                 (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    return {
+        "in_proj": he_init(ks[0], (D, d_in_proj), D, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, cfg.ssm_conv))
+                   * (1.0 / jnp.sqrt(cfg.ssm_conv))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[2], (H,), minval=1.0,
+                                            maxval=16.0)).astype(jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": he_init(ks[4], (d_inner, D), d_inner, dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jnp.ndarray):
+    d_inner, H, P, N, _, _ = _dims(cfg)
+    z, x, B, C, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal 1-d conv. xbc: (B, S, C); w: (C, K)."""
+    K = w.shape[1]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    y = _conv_unrolled(pad, w, K)
+    return jax.nn.silu(y + b.astype(y.dtype))
+
+
+def _conv_unrolled(padded: jnp.ndarray, w: jnp.ndarray, K: int):
+    """Small-K depthwise conv as a sum of shifted slices (K ≤ 4)."""
+    S = padded.shape[1] - (K - 1)
+    acc = None
+    for i in range(K):
+        term = padded[:, i:i + S, :] * w[:, i].astype(padded.dtype)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def _segsum(t: jnp.ndarray) -> jnp.ndarray:
+    """(..., q) → (..., q, q) with out[i, j] = sum_{k=j+1..i} t[k] (i ≥ j)."""
+    cs = jnp.cumsum(t, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    q = t.shape[-1]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, a_dt: jnp.ndarray, B: jnp.ndarray,
+                C: jnp.ndarray, chunk: int = 128,
+                init_state: jnp.ndarray = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan (pure jnp oracle; Pallas kernel mirrors this).
+
+    x (b,l,h,p) — already scaled by dt;  a_dt (b,l,h) = A·dt;
+    B, C (b,l,h,n).  Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, f"seq {l} not divisible by chunk {chunk}"
+    c = l // chunk
+    xc = x.reshape(b, c, chunk, h, p)
+    Bc = B.reshape(b, c, chunk, h, n)
+    Cc = C.reshape(b, c, chunk, h, n)
+    a = a_dt.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)     # (b,h,c,q)
+    a_cum = jnp.cumsum(a, axis=-1)
+
+    # intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(a))                                     # (b,h,c,q,q)
+    y_diag = jnp.einsum("bcqhn,bcshn,bhcqs,bcshp->bcqhp",
+                        Cc, Bc, L.astype(x.dtype), xc)
+
+    # per-chunk output states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)             # (b,h,c,q)
+    states = jnp.einsum("bcqhn,bhcq,bcqhp->bchpn",
+                        Bc, decay_states.astype(x.dtype), xc)   # (b,c,h,p,n)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])                       # (b,h,c)
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((b, h, p, n), x.dtype))
+
+    def step(carry, inp):
+        st, dec = inp                                           # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None].astype(x.dtype) + st
+        return new, carry                                       # emit prev
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0),
+                   jnp.moveaxis(chunk_decay, 2, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)               # (b,c,h,p,n)
+
+    # off-diagonal: contribution of the state entering each chunk
+    state_decay = jnp.exp(a_cum)                                # (b,h,c,q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp",
+                       Cc, prev_states, state_decay.astype(x.dtype))
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def mamba_block(p: Pytree, x: jnp.ndarray, cfg: ArchConfig,
+                chunk: int = 128, return_cache: bool = False):
+    """Full-sequence Mamba2 block. x: (B, S, D) → (B, S, D)."""
+    Bsz, S, D = x.shape
+    d_inner, H, P, N, conv_dim, _ = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xs, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+
+    xbc_raw = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                        # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                    # (H,)
+    xh = xs.reshape(Bsz, S, H, P)
+    Bh = jnp.broadcast_to(Bm[:, :, None, :], (Bsz, S, H, N)).astype(x.dtype)
+    Ch = jnp.broadcast_to(Cm[:, :, None, :], (Bsz, S, H, N)).astype(x.dtype)
+
+    ck = min(chunk, S)
+    while S % ck:
+        ck -= 1
+    y, final_state = ssd_chunked(xh * dt[..., None].astype(x.dtype),
+                                 (A[None, None, :] * dt), Bh, Ch, chunk=ck)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_cache:
+        K = cfg.ssm_conv
+        tail = xbc_raw[:, -(K - 1):, :]
+        if S < K - 1:
+            tail = jnp.pad(xbc_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        cache = {"conv": tail.astype(jnp.float32),
+                 "ssm": final_state.astype(jnp.float32)}
+        return out, cache
+    return out
+
+
+# ----------------------------------------------------------------- decode
+def init_mamba_cache(cfg: ArchConfig, batch: int,
+                     dtype=jnp.float32) -> Pytree:
+    d_inner, H, P, N, conv_dim, _ = _dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+            "ssm": jnp.zeros((batch, H, P, N), dtype)}
+
+
+def mamba_decode_step(p: Pytree, x: jnp.ndarray, cache: Pytree,
+                      cfg: ArchConfig) -> Tuple[jnp.ndarray, Pytree]:
+    """One-token decode. x: (B, 1, D)."""
+    Bsz = x.shape[0]
+    d_inner, H, P, N, conv_dim, _ = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))[:, 0]
+    z, xs, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+
+    xbc_new = jnp.concatenate([xs, Bm, Cm], axis=-1)             # (B, conv_dim)
+    window = jnp.concatenate(
+        [cache["conv"].astype(x.dtype), xbc_new[:, None, :]], axis=1)
+    w = p["conv_w"].astype(x.dtype)                              # (C, K)
+    y_conv = jnp.einsum("bkc,ck->bc", window, w) + p["conv_b"].astype(x.dtype)
+    xbc = jax.nn.silu(y_conv)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(A[None, :] * dt)                                 # (B,H)
+    xh = xs.reshape(Bsz, H, P)
+    h_prev = cache["ssm"].astype(jnp.float32)
+    dBx = (dt[..., None, None] * Bm.astype(jnp.float32)[:, None, None, :]
+           * xh.astype(jnp.float32)[..., None])                  # (B,H,P,N)
+    h = a[..., None, None] * h_prev + dBx
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y.astype(x.dtype) + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(Bsz, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"].astype(x.dtype))
+    new_cache = {"conv": window[:, 1:, :].astype(cache["conv"].dtype),
+                 "ssm": h.astype(cache["ssm"].dtype)}
+    return out[:, None, :], new_cache

@@ -1,0 +1,460 @@
+"""Unified decoder backbone covering all six assigned arch types.
+
+The layer stack is `lax.scan` over superblocks (one repetition of
+cfg.pattern) with stacked params — compile time and HLO size stay bounded
+for 26–48-layer models.  A remainder of n_layers % period pattern
+positions is unrolled with unstacked params.  'shared_attn' blocks
+(Zamba2) hold one weight-tied param set used at every occurrence.
+
+Entry points:
+  init_params(cfg, rng)                       → params
+  forward(cfg, params, batch)                 → logits           (train/eval)
+  prefill(cfg, params, batch)                 → (logits, cache)  (prefill)
+  decode_step(cfg, params, cache, tokens, pos)→ (logits, cache)  (decode)
+  init_cache(cfg, batch_size, context_len)    → cache pytree
+  make_train_step(cfg)                        → jit-able train step
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import apply_updates, make_optimizer
+from .attention import (attn_init, cross_attention, decode_cross_attention,
+                        decode_self_attention, init_cross_cache,
+                        init_kv_cache, kv_to_cache, self_attention)
+from .config import ArchConfig
+from .layers import (cross_entropy_loss, dtype_of, embed_init, gated_mlp,
+                     gated_mlp_init, he_init, rms_norm, softcap)
+from .moe import moe_block, moe_init
+from .ssm import init_mamba_cache, mamba_block, mamba_decode_step, mamba_init
+
+Pytree = Any
+
+
+# ============================================================ param init
+def _block_init(rng, kind: str, cfg: ArchConfig, dtype,
+                use_moe: bool = False) -> Pytree:
+    ks = jax.random.split(rng, 6)
+    D = cfg.d_model
+    if kind == "mamba":
+        return {"ln1": jnp.zeros((D,), dtype),
+                "mamba": mamba_init(ks[0], cfg, dtype)}
+    p = {"ln1": jnp.zeros((D,), dtype),
+         "attn": attn_init(ks[0], cfg, dtype),
+         "ln2": jnp.zeros((D,), dtype)}
+    if use_moe and kind in ("attn", "local", "cross"):
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = gated_mlp_init(ks[1], D, cfg.d_ff, dtype)
+    if kind == "cross":
+        p["lnx"] = jnp.zeros((D,), dtype)
+        p["xattn"] = attn_init(ks[2], cfg, dtype)
+        p["xgate"] = jnp.zeros((1,), jnp.float32)
+    return p
+
+
+def init_params(cfg: ArchConfig, rng) -> Pytree:
+    dtype = dtype_of(cfg.param_dtype)
+    D, V = cfg.d_model, cfg.vocab
+    ks = jax.random.split(rng, 8 + len(cfg.pattern))
+    params: Dict[str, Any] = {}
+
+    if cfg.n_codebooks:
+        params["embed"] = embed_init(ks[0], (cfg.n_codebooks, V, D), dtype)
+    else:
+        params["embed"] = embed_init(ks[0], (V, D), dtype)
+
+    # scanned superblocks: stack n_super copies per pattern position
+    blocks: Dict[str, Any] = {}
+    for i, kind in enumerate(cfg.pattern):
+        if kind == "shared_attn":
+            continue
+        key = jax.random.fold_in(ks[1], i)
+        stack = [_block_init(jax.random.fold_in(key, s), kind, cfg, dtype,
+                             cfg.use_moe(i))
+                 for s in range(cfg.n_super)]
+        blocks[f"pos{i}"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *stack) if cfg.n_super > 1 else \
+            jax.tree_util.tree_map(lambda x: x[None], stack[0])
+    params["blocks"] = blocks
+
+    # unrolled remainder
+    layer_positions = [i for i, k in enumerate(cfg.pattern)
+                       if k != "shared_attn"]
+    rem = {}
+    for j in range(cfg.n_rem):
+        i = layer_positions[j]
+        rem[f"pos{i}"] = _block_init(jax.random.fold_in(ks[2], j),
+                                     cfg.pattern[i], cfg, dtype,
+                                     cfg.use_moe(i))
+    if rem:
+        params["rem"] = rem
+
+    if any(k == "shared_attn" for k in cfg.pattern):
+        params["shared_attn"] = _block_init(ks[3], "attn", cfg, dtype)
+
+    params["final_norm"] = jnp.zeros((D,), dtype)
+    if not cfg.tie_embeddings:
+        out = V * max(1, cfg.n_codebooks)
+        params["head"] = he_init(ks[4], (D, out), D, dtype)
+    return params
+
+
+# ============================================================ block fwd
+def _apply_block(kind: str, p: Pytree, x: jnp.ndarray, cfg: ArchConfig,
+                 positions: jnp.ndarray, window_override: Optional[int],
+                 image_embeds: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if kind == "mamba":
+        return x + mamba_block(p["mamba"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                               cfg)
+    window = cfg.window if kind == "local" else None
+    if window_override is not None and kind in ("attn", "shared_attn"):
+        window = window_override
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + self_attention(p["attn"], h, positions, cfg, window)
+    if kind == "cross" and image_embeds is not None:
+        hx = rms_norm(x, p["lnx"], cfg.norm_eps)
+        gate = jnp.tanh(p["xgate"]).astype(x.dtype)
+        x = x + gate * cross_attention(p["xattn"], hx, image_embeds, cfg)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        return x + moe_block(p["moe"], h2, cfg)
+    return x + gated_mlp(p["mlp"], h2, cfg.act)
+
+
+def _superblock(params_i: Pytree, shared: Optional[Pytree], x: jnp.ndarray,
+                cfg: ArchConfig, positions: jnp.ndarray,
+                image_embeds: Optional[jnp.ndarray]) -> jnp.ndarray:
+    for i, kind in enumerate(cfg.pattern):
+        if kind == "shared_attn":
+            x = _apply_block("attn", shared, x, cfg, positions,
+                             cfg.shared_attn_window or None, image_embeds)
+        else:
+            x = _apply_block(kind, params_i[f"pos{i}"], x, cfg, positions,
+                             None, image_embeds)
+    return x
+
+
+# ============================================================ embeddings
+def _embed(cfg: ArchConfig, params: Pytree, tokens: jnp.ndarray,
+           dtype) -> jnp.ndarray:
+    if cfg.n_codebooks:
+        # tokens: (B, n_cb, S) → sum of per-codebook embeddings
+        embs = [params["embed"][c][tokens[:, c, :]]
+                for c in range(cfg.n_codebooks)]
+        return sum(embs).astype(dtype)
+    return params["embed"][tokens].astype(dtype)
+
+
+def _logits(cfg: ArchConfig, params: Pytree, h: jnp.ndarray) -> jnp.ndarray:
+    if not cfg.tie_embeddings and "head" in params:
+        out = jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype))
+    elif cfg.n_codebooks:
+        out = jnp.einsum("bsd,cvd->bscv", h, params["embed"].astype(h.dtype))
+        out = out.reshape(*h.shape[:2], cfg.n_codebooks * cfg.vocab)
+    else:
+        out = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    return softcap(out, cfg.final_logit_softcap)
+
+
+# ============================================================ forward
+def forward(cfg: ArchConfig, params: Pytree, batch: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    """Full-sequence forward → logits (B, S, V[*n_cb])."""
+    dtype = dtype_of(cfg.dtype)
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    S = tokens.shape[-1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    image_embeds = batch.get("image_embeds")
+    if image_embeds is not None:
+        image_embeds = image_embeds.astype(dtype)
+
+    x = _embed(cfg, params, tokens, dtype)
+    shared = params.get("shared_attn")
+
+    body = partial(_superblock, shared=shared, cfg=cfg, positions=positions,
+                   image_embeds=image_embeds)
+
+    def scan_fn(x, params_i):
+        f = (jax.checkpoint(lambda pi, xx: body(pi, x=xx))
+             if cfg.remat else (lambda pi, xx: body(pi, x=xx)))
+        return f(params_i, x), None
+
+    if cfg.n_super > 0:
+        x, _ = jax.lax.scan(scan_fn, x, params["blocks"])
+    layer_positions = [i for i, k in enumerate(cfg.pattern)
+                       if k != "shared_attn"]
+    for j in range(cfg.n_rem):
+        i = layer_positions[j]
+        x = _apply_block(cfg.pattern[i], params["rem"][f"pos{i}"], x, cfg,
+                         positions, None, image_embeds)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x)
+
+
+# ============================================================ loss / train
+def loss_fn(cfg: ArchConfig, params: Pytree,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    logits = forward(cfg, params, batch)
+    labels = batch["labels"]
+    if cfg.n_codebooks:
+        B, S = labels.shape[0], labels.shape[-1]
+        logits = logits.reshape(B, S, cfg.n_codebooks, cfg.vocab)
+        logits = jnp.swapaxes(logits, 1, 2)  # (B, n_cb, S, V)
+    return cross_entropy_loss(
+        logits, labels,
+        impl="logsumexp" if cfg.efficient_ce else "logsoftmax")
+
+
+def make_train_step(cfg: ArchConfig):
+    """Returns (train_step, init_state). State = {'params', 'opt'}."""
+    optimizer = make_optimizer(cfg.optimizer, cfg.learning_rate)
+
+    def init_state(rng) -> Pytree:
+        params = init_params(cfg, rng)
+        return {"params": params, "opt": optimizer.init(params)}
+
+    def train_step(state: Pytree, batch: Dict[str, jnp.ndarray]) -> Tuple:
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch))(state["params"])
+        updates, opt = optimizer.update(grads, state["opt"], state["params"])
+        params = apply_updates(state["params"], updates)
+        return {"params": params, "opt": opt}, loss
+
+    return train_step, init_state
+
+
+# ============================================================ caches
+def _block_cache(kind: str, cfg: ArchConfig, batch: int, context: int,
+                 dtype=jnp.bfloat16) -> Pytree:
+    if kind == "mamba":
+        return init_mamba_cache(cfg, batch, jnp.float32)
+    if kind == "local":
+        length = min(cfg.window, context)
+    elif kind == "shared_attn" and cfg.shared_attn_window:
+        length = min(cfg.shared_attn_window, context)
+    else:
+        length = context
+    c = init_kv_cache(cfg, batch, length, dtype)
+    if kind == "cross":
+        c["ck"] = jnp.zeros((batch, cfg.n_patches, cfg.n_kv_heads, cfg.hd),
+                            dtype)
+        c["cv"] = jnp.zeros((batch, cfg.n_patches, cfg.n_kv_heads, cfg.hd),
+                            dtype)
+    return c
+
+
+def init_cache(cfg: ArchConfig, batch: int, context: int,
+               dtype=jnp.bfloat16) -> Pytree:
+    """Zero-initialised cache pytree matching decode_step's expectations."""
+    def stack(tree, n):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+    cache: Dict[str, Any] = {"blocks": {}}
+    for i, kind in enumerate(cfg.pattern):
+        blk = _block_cache(kind, cfg, batch, context, dtype)
+        cache["blocks"][f"pos{i}"] = stack(blk, max(1, cfg.n_super))
+    layer_positions = [i for i, k in enumerate(cfg.pattern)
+                       if k != "shared_attn"]
+    rem = {}
+    for j in range(cfg.n_rem):
+        i = layer_positions[j]
+        rem[f"pos{i}"] = _block_cache(cfg.pattern[i], cfg, batch, context,
+                                      dtype)
+    if rem:
+        cache["rem"] = rem
+    return cache
+
+
+def warm_cross_caches(cfg: ArchConfig, params: Pytree, cache: Pytree,
+                      image_embeds: jnp.ndarray) -> Pytree:
+    """Populate cross-attn K/V from vision features (before decoding)."""
+    dtype = dtype_of(cfg.dtype)
+    feats = image_embeds.astype(dtype)
+    new_blocks = dict(cache["blocks"])
+    for i, kind in enumerate(cfg.pattern):
+        if kind != "cross":
+            continue
+        xattn_stack = params["blocks"][f"pos{i}"]["xattn"]
+        def per_super(pw):
+            return init_cross_cache(pw, feats, dtype)
+        cc = jax.vmap(per_super)(xattn_stack)
+        ent = dict(cache["blocks"][f"pos{i}"])
+        ent["ck"], ent["cv"] = cc["ck"], cc["cv"]
+        new_blocks[f"pos{i}"] = ent
+    out = dict(cache)
+    out["blocks"] = new_blocks
+    return out
+
+
+# ============================================================ prefill
+def _prefill_block(kind: str, p: Pytree, x: jnp.ndarray, cfg: ArchConfig,
+                   positions: jnp.ndarray,
+                   image_embeds: Optional[jnp.ndarray], cache_dtype,
+                   cache_len: int,
+                   window_override: Optional[int] = None
+                   ) -> Tuple[jnp.ndarray, Pytree]:
+    if kind == "mamba":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, c = mamba_block(p["mamba"], h, cfg, return_cache=True)
+        return x + y, c
+    window = cfg.window if kind == "local" else window_override
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, (k, v) = self_attention(p["attn"], h, positions, cfg, window,
+                               return_kv=True)
+    x = x + y
+    kc, vc = kv_to_cache(k, v, window, cache_dtype)
+    if not window and cache_len > kc.shape[2]:
+        pad = cache_len - kc.shape[2]
+        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    c = {"k": kc, "v": vc}
+    if kind == "cross" and image_embeds is not None:
+        hx = rms_norm(x, p["lnx"], cfg.norm_eps)
+        gate = jnp.tanh(p["xgate"]).astype(x.dtype)
+        x = x + gate * cross_attention(p["xattn"], hx, image_embeds, cfg)
+        cc = init_cross_cache(p["xattn"], image_embeds, cache_dtype)
+        c["ck"], c["cv"] = cc["ck"], cc["cv"]
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        x = x + moe_block(p["moe"], h2, cfg)
+    else:
+        x = x + gated_mlp(p["mlp"], h2, cfg.act)
+    return x, c
+
+
+def prefill(cfg: ArchConfig, params: Pytree, batch: Dict[str, jnp.ndarray],
+            cache_len: Optional[int] = None,
+            cache_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Pytree]:
+    """Inference prefill: full-sequence forward that also emits the decode
+    cache (KV per attention block in ring/linear layout, SSM states for
+    Mamba blocks, cross-attn K/V for VLM blocks)."""
+    dtype = dtype_of(cfg.dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape[0], tokens.shape[-1]
+    cache_len = cache_len or S
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    image_embeds = batch.get("image_embeds")
+    if image_embeds is not None:
+        image_embeds = image_embeds.astype(dtype)
+
+    x = _embed(cfg, params, tokens, dtype)
+    shared = params.get("shared_attn")
+
+    def scan_fn(x, params_i):
+        new_cache = {}
+        for i, kind in enumerate(cfg.pattern):
+            if kind == "shared_attn":
+                x, c = _prefill_block(
+                    "attn", shared, x, cfg, positions, image_embeds,
+                    cache_dtype, cache_len,
+                    cfg.shared_attn_window or None)
+            else:
+                x, c = _prefill_block(
+                    kind, params_i[f"pos{i}"], x, cfg, positions,
+                    image_embeds, cache_dtype, cache_len)
+            new_cache[f"pos{i}"] = c
+        return x, new_cache
+
+    cache: Dict[str, Any] = {}
+    if cfg.n_super > 0:
+        x, blocks_cache = jax.lax.scan(scan_fn, x, params["blocks"])
+        cache["blocks"] = blocks_cache
+    layer_positions = [i for i, k in enumerate(cfg.pattern)
+                       if k != "shared_attn"]
+    rem = {}
+    for j in range(cfg.n_rem):
+        i = layer_positions[j]
+        x, c = _prefill_block(cfg.pattern[i], params["rem"][f"pos{i}"], x,
+                              cfg, positions, image_embeds, cache_dtype,
+                              cache_len)
+        rem[f"pos{i}"] = c
+    if rem:
+        cache["rem"] = rem
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x), cache
+
+
+# ============================================================ decode
+def _decode_block(kind: str, p: Pytree, x: jnp.ndarray, blk_cache: Pytree,
+                  pos: jnp.ndarray, cfg: ArchConfig,
+                  window_override: Optional[int] = None
+                  ) -> Tuple[jnp.ndarray, Pytree]:
+    if kind == "mamba":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, new_cache = mamba_decode_step(p["mamba"], h, blk_cache, cfg)
+        return x + y, new_cache
+    window = cfg.window if kind == "local" else window_override
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    kv = {"k": blk_cache["k"], "v": blk_cache["v"]}
+    y, kv = decode_self_attention(p["attn"], h, kv, pos, cfg, window)
+    x = x + y
+    new_cache = dict(blk_cache)
+    new_cache.update(kv)
+    if kind == "cross":
+        hx = rms_norm(x, p["lnx"], cfg.norm_eps)
+        gate = jnp.tanh(p["xgate"]).astype(x.dtype)
+        cc = {"ck": blk_cache["ck"], "cv": blk_cache["cv"]}
+        x = x + gate * decode_cross_attention(p["xattn"], hx, cc, cfg)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        x = x + moe_block(p["moe"], h2, cfg)
+    else:
+        x = x + gated_mlp(p["mlp"], h2, cfg.act)
+    return x, new_cache
+
+
+def decode_step(cfg: ArchConfig, params: Pytree, cache: Pytree,
+                tokens: jnp.ndarray, pos: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Pytree]:
+    """One decode step. tokens: (B, 1) (audio: (B, n_cb, 1)); pos: (B,)."""
+    dtype = dtype_of(cfg.dtype)
+    x = _embed(cfg, params, tokens, dtype)
+    shared = params.get("shared_attn")
+
+    def superblock_dec(x, params_i, cache_i):
+        new_cache = {}
+        for i, kind in enumerate(cfg.pattern):
+            ci = cache_i[f"pos{i}"]
+            if kind == "shared_attn":
+                x, nc = _decode_block("attn", shared, x, ci, pos, cfg,
+                                      cfg.shared_attn_window or None)
+            else:
+                x, nc = _decode_block(kind, params_i[f"pos{i}"], x, ci, pos,
+                                      cfg)
+            new_cache[f"pos{i}"] = nc
+        return x, new_cache
+
+    def scan_fn(x, inp):
+        params_i, cache_i = inp
+        return superblock_dec(x, params_i, cache_i)
+
+    if cfg.n_super > 0:
+        x, new_blocks = jax.lax.scan(scan_fn, x,
+                                     (params["blocks"], cache["blocks"]))
+    else:
+        new_blocks = cache["blocks"]
+
+    layer_positions = [i for i, k in enumerate(cfg.pattern)
+                       if k != "shared_attn"]
+    new_rem = {}
+    for j in range(cfg.n_rem):
+        i = layer_positions[j]
+        x, nc = _decode_block(cfg.pattern[i], params["rem"][f"pos{i}"], x,
+                              cache["rem"][f"pos{i}"], pos, cfg)
+        new_rem[f"pos{i}"] = nc
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(cfg, params, x)
+    out_cache: Dict[str, Any] = {"blocks": new_blocks}
+    if new_rem:
+        out_cache["rem"] = new_rem
+    return logits, out_cache

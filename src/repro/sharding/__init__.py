@@ -1,0 +1,9 @@
+from .flash_decode import reference_decode_attention, sharded_decode_attention
+from .rules import (DEFAULT_OPTIONS, ShardingOptions, batch_specs,
+                    cache_specs, data_axes, logits_spec, opt_specs,
+                    param_spec_for, param_specs, to_named)
+
+__all__ = ["DEFAULT_OPTIONS", "ShardingOptions", "batch_specs",
+           "cache_specs", "data_axes", "logits_spec", "opt_specs",
+           "param_spec_for", "param_specs", "to_named",
+           "reference_decode_attention", "sharded_decode_attention"]

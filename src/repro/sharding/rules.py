@@ -1,0 +1,266 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Strategy (FSDP + TP, MaxText-flavoured):
+  * every weight gets a 'model' (tensor-parallel) dim — heads / ff /
+    experts / vocab — picked from an ordered candidate list, skipping
+    candidates whose size does not divide the mesh axis;
+  * a second dim is sharded over the data axis (FSDP); in multi-pod mode
+    the FSDP axis is ('pod','data') so parameters/optimizer state scale
+    down with the full 512-chip fleet;
+  * activations shard batch over ('pod','data') and model dims follow the
+    weights;
+  * decode KV caches shard the *sequence* dim over 'model' (the flash-
+    decoding layout) and batch over data when divisible.
+
+Everything is best-effort: a dim that doesn't divide falls through to the
+next candidate or stays replicated — XLA SPMD remains correct either way,
+and the roofline analysis (§Perf) is where bad choices get caught.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ArchConfig
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class ShardingOptions:
+    """Hillclimb knobs for the sharding strategy (§Perf variants).
+
+    use_model_axis   : False → pure data parallelism; params are only
+                       FSDP-sharded over the data axes (right for models
+                       whose optimizer state fits per chip — e.g. a 130M
+                       Mamba2 gains nothing from 16-way TP).
+    attn_model       : False → attention projections are NOT model-sharded
+                       (avoids hd-dim resharding ping-pong for archs with
+                       few heads, e.g. gemma3's 4 q / 1 kv heads).
+    batch_over_model : also shard the batch dim over 'model' (pure-DP mode
+                       turns the whole mesh into one big data axis).
+    """
+    use_model_axis: bool = True
+    attn_model: bool = True
+    batch_over_model: bool = False
+    # fully replicate parameters (pure DP for models that fit per chip —
+    # avoids the FSDP-gather-vs-batch-axis conflict dp-only exposed)
+    replicate_params: bool = False
+
+
+DEFAULT_OPTIONS = ShardingOptions()
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The (outer) data-parallel axes: ('pod','data') when multi-pod."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape.keys())
+
+
+def _pick_spec(shape: Sequence[int], mesh: Mesh,
+               model_cands: Sequence[int], data_cands: Sequence[int],
+               model_axis: str = "model") -> P:
+    """Assign 'model' to the first divisible candidate dim (negative
+    indices from the end), then the FSDP axes to another dim."""
+    spec: list = [None] * len(shape)
+    msize = _axis_size(mesh, model_axis)
+    for d in model_cands:
+        i = d % len(shape)
+        if shape[i] > 0 and shape[i] % msize == 0 and spec[i] is None:
+            spec[i] = model_axis
+            break
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+    for d in data_cands:
+        i = d % len(shape)
+        if shape[i] > 0 and shape[i] % dsize == 0 and spec[i] is None:
+            spec[i] = daxes if len(daxes) > 1 else daxes[0]
+            break
+    return P(*spec)
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+# ------------------------------------------------------------------ params
+def param_spec_for(path_names: Sequence[str], shape: Sequence[int],
+                   mesh: Mesh,
+                   opts: ShardingOptions = DEFAULT_OPTIONS) -> P:
+    """Sharding for one parameter leaf, by name + context + shape."""
+    name = path_names[-1]
+    ctx = set(path_names)
+
+    if name in ("ln1", "ln2", "lnx", "final_norm", "norm", "conv_b",
+                "xgate", "A_log", "dt_bias", "D", "count"):
+        return P()
+    if opts.replicate_params:
+        return P()
+    if not opts.use_model_axis:
+        # pure-DP / FSDP-only: shard a trailing dim over data (never the
+        # leading stacked-layer dim — it is the scan axis)
+        return _pick_spec(shape, mesh, model_cands=(),
+                          data_cands=tuple(range(-1, -len(shape), -1))
+                          or (-1,))
+    if not opts.attn_model and name in ("wq", "wk", "wv", "wo"):
+        return _pick_spec(
+            shape, mesh, model_cands=(),
+            data_cands=(-3,) if name != "wo" else (-1,))
+    if name == "embed":
+        return _pick_spec(shape, mesh, model_cands=(-2,), data_cands=(-1,))
+    if name == "head":
+        return _pick_spec(shape, mesh, model_cands=(-1,), data_cands=(-2,))
+    if name == "router":
+        return _pick_spec(shape, mesh, model_cands=(-1,), data_cands=(-2,))
+    if name in ("wq", "wk", "wv"):          # (..., D, H, hd)
+        return _pick_spec(shape, mesh, model_cands=(-2, -1),
+                          data_cands=(-3,))
+    if name == "wo":                         # (..., H, hd, D)
+        return _pick_spec(shape, mesh, model_cands=(-3, -2),
+                          data_cands=(-1,))
+    if name in ("wg", "wu"):
+        if "moe" in ctx:                     # (..., E, D, F)
+            return _pick_spec(shape, mesh, model_cands=(-3,),
+                              data_cands=(-1,))
+        return _pick_spec(shape, mesh, model_cands=(-1,), data_cands=(-2,))
+    if name == "wd":
+        if "moe" in ctx:                     # (..., E, F, D)
+            return _pick_spec(shape, mesh, model_cands=(-3,),
+                              data_cands=(-2,))
+        return _pick_spec(shape, mesh, model_cands=(-2,), data_cands=(-1,))
+    if name == "in_proj":                    # (..., D, d_in_proj)
+        return _pick_spec(shape, mesh, model_cands=(-1,), data_cands=(-2,))
+    if name == "out_proj":                   # (..., d_inner, D)
+        return _pick_spec(shape, mesh, model_cands=(-2,), data_cands=(-1,))
+    if name == "conv_w":                     # (..., conv_dim, K)
+        return _pick_spec(shape, mesh, model_cands=(-2,), data_cands=())
+    # fallback: replicate
+    return P()
+
+
+def param_specs(tree: Pytree, mesh: Mesh,
+                opts: ShardingOptions = DEFAULT_OPTIONS) -> Pytree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [param_spec_for(_path_names(path), np.shape(leaf), mesh, opts)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(opt_state: Pytree, params_specs_tree: Pytree,
+              mesh: Mesh,
+              opts: ShardingOptions = DEFAULT_OPTIONS) -> Pytree:
+    """Optimizer state mirrors param sharding (m/v); scalars replicate."""
+    def one(path, leaf):
+        names = _path_names(path)
+        if names and names[0] in ("m", "v"):
+            return param_spec_for(names[1:], np.shape(leaf), mesh, opts)
+        return P()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+# ------------------------------------------------------------------ batch
+def batch_specs(batch: Pytree, mesh: Mesh,
+                opts: ShardingOptions = DEFAULT_OPTIONS) -> Pytree:
+    """Shard batch dims over ('pod','data'); everything else replicated."""
+    daxes = data_axes(mesh)
+    if opts.batch_over_model:
+        daxes = daxes + ("model",)
+
+    def one(leaf):
+        shape = np.shape(leaf)
+        if not shape:
+            return P()
+        # largest prefix of the data axes that divides the batch dim
+        # (e.g. batch 256 on a 512-chip pure-DP mesh shards 32-way over
+        # ('pod','data') instead of falling back to full replication)
+        axes = list(daxes)
+        while axes and shape[0] % _axis_size(mesh, tuple(axes)) != 0:
+            axes.pop()
+        if not axes:
+            return P(*([None] * len(shape)))
+        dspec = tuple(axes) if len(axes) > 1 else axes[0]
+        return P(dspec, *([None] * (len(shape) - 1)))
+    return jax.tree_util.tree_map(one, batch)
+
+
+# ------------------------------------------------------------------ cache
+def cache_spec_for(path_names: Sequence[str], shape: Sequence[int],
+                   mesh: Mesh) -> P:
+    """Decode-cache sharding: KV seq over 'model' (flash-decode layout),
+    batch over data when divisible; SSM states shard heads/P over model."""
+    name = path_names[-1]
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+    msize = _axis_size(mesh, "model")
+    spec: list = [None] * len(shape)
+
+    if name in ("k", "v"):       # (L, B, K, S, hd) or (B, K, S, hd)
+        b, s = len(shape) - 4, len(shape) - 2
+        if shape[b] % dsize == 0:
+            spec[b] = dspec
+        if shape[s] % msize == 0:
+            spec[s] = "model"
+        return P(*spec)
+    if name in ("ck", "cv"):     # (L, B, P, K, hd)
+        b = len(shape) - 4
+        if shape[b] % dsize == 0:
+            spec[b] = dspec
+        return P(*spec)
+    if name == "conv":           # (L, B, K-1, conv_dim)
+        b, c = len(shape) - 3, len(shape) - 1
+        if shape[b] % dsize == 0:
+            spec[b] = dspec
+        if shape[c] % msize == 0:
+            spec[c] = "model"
+        return P(*spec)
+    if name == "ssm":            # (L, B, H, P, N)
+        b, h, p = len(shape) - 4, len(shape) - 3, len(shape) - 2
+        if shape[b] % dsize == 0:
+            spec[b] = dspec
+        if shape[h] % msize == 0:
+            spec[h] = "model"
+        elif shape[p] % msize == 0:
+            spec[p] = "model"
+        return P(*spec)
+    return P()
+
+
+def cache_specs(cache: Pytree, mesh: Mesh,
+                opts: ShardingOptions = DEFAULT_OPTIONS) -> Pytree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = [cache_spec_for(_path_names(path), np.shape(leaf), mesh)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ------------------------------------------------------------------ logits
+def logits_spec(mesh: Mesh) -> P:
+    daxes = data_axes(mesh)
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+    return P(dspec, None, "model")
+
+
+def to_named(tree_specs: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,73 @@
+"""Unit tests: staleness-aware aggregation (paper Eq. 3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ClientUpdate, UpdateStore, fedavg_aggregate,
+                        staleness_aggregate, staleness_coefficients)
+
+
+def _upd(cid, value, n, rnd):
+    return ClientUpdate(cid, {"w": jnp.full((4,), float(value))}, n, rnd)
+
+
+def test_fresh_updates_reduce_to_fedavg():
+    """t_k = t ⇒ Eq. 3 becomes FedAvg exactly."""
+    ups = [_upd("a", 1.0, 10, 7), _upd("b", 3.0, 30, 7)]
+    got = staleness_aggregate(ups, current_round=7, tau=2)
+    want = fedavg_aggregate(ups)
+    np.testing.assert_allclose(got["w"], want["w"], rtol=1e-6)
+    np.testing.assert_allclose(got["w"], np.full(4, 2.5), rtol=1e-6)
+
+
+def test_stale_updates_dampened():
+    fresh = [_upd("a", 1.0, 10, 5)]
+    stale = [_upd("a", 1.0, 10, 4)]
+    g_fresh = staleness_aggregate(fresh, 5, tau=3)
+    g_stale = staleness_aggregate(stale, 5, tau=3)
+    assert float(g_stale["w"][0]) < float(g_fresh["w"][0])
+    # damping factor is (t_k+1)/(t+1) = 5/6
+    np.testing.assert_allclose(g_stale["w"], np.full(4, 5.0 / 6.0), rtol=1e-6)
+
+
+def test_tau_discards_obsolete():
+    ups = [_upd("a", 1.0, 10, 2), _upd("b", 5.0, 10, 5)]
+    got = staleness_aggregate(ups, 5, tau=2)   # age 3 ≥ τ → dropped
+    np.testing.assert_allclose(got["w"], np.full(4, 5.0), rtol=1e-6)
+    assert staleness_aggregate([_upd("a", 1.0, 10, 0)], 5, tau=2) is None
+
+
+def test_coefficients_sum_below_one_with_staleness():
+    ups = [_upd("a", 1.0, 10, 4), _upd("b", 1.0, 10, 5)]
+    c = staleness_coefficients(ups, 5)
+    assert c.sum() <= 1.0 + 1e-9
+    assert np.all(c >= 0)
+
+
+def test_update_store_semantics():
+    store = UpdateStore(tau=2)
+    store.push(_upd("late", 1.0, 10, 3))
+    store.push(_upd("older", 1.0, 10, 1))
+    fresh = store.pop_for_round(4)
+    assert [u.client_id for u in fresh] == ["late"]
+    assert len(store) == 0                      # popped clears
+
+
+def test_fedavg_weighting_by_cardinality():
+    ups = [_upd("a", 0.0, 90, 0), _upd("b", 10.0, 10, 0)]
+    got = fedavg_aggregate(ups)
+    np.testing.assert_allclose(got["w"], np.full(4, 1.0), rtol=1e-6)
+
+
+def test_update_store_arrival_times():
+    """In-flight updates stay queued until their arrival time; aged-out
+    ones are dropped when finally visible."""
+    store = UpdateStore(tau=2)
+    store.push(_upd("fast", 1.0, 10, 3), arrival_time=100.0)
+    store.push(_upd("slow", 2.0, 10, 3), arrival_time=999.0)
+    got = store.pop_for_round(4, now=150.0)
+    assert [u.client_id for u in got] == ["fast"]
+    assert len(store) == 1                      # slow still in flight
+    # by the time 'slow' arrives, it has aged out (round 8, age 5 >= tau)
+    got = store.pop_for_round(8, now=1000.0)
+    assert got == [] and len(store) == 0

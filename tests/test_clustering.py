@@ -1,0 +1,89 @@
+"""Unit tests: DBSCAN + Calinski–Harabasz (from scratch, vs brute force)."""
+import numpy as np
+
+from repro.core import calinski_harabasz, cluster_clients, dbscan
+
+
+def _brute_force_dbscan(x, eps, min_samples):
+    """Independent O(N^3) reimplementation for cross-checking labels
+    (up to label permutation)."""
+    n = len(x)
+    d = np.sqrt(((x[:, None] - x[None]) ** 2).sum(-1))
+    neigh = [set(np.nonzero(d[i] <= eps)[0]) for i in range(n)]
+    core = [len(neigh[i]) >= min_samples for i in range(n)]
+    labels = [-1] * n
+    c = 0
+    for i in range(n):
+        if labels[i] != -1 or not core[i]:
+            continue
+        stack, labels[i] = [i], c
+        while stack:
+            p = stack.pop()
+            for q in neigh[p]:
+                if labels[q] == -1:
+                    labels[q] = c
+                    if core[q]:
+                        stack.append(q)
+        c += 1
+    return np.array(labels)
+
+
+def _same_partition(a, b):
+    """Labelings equal up to renaming."""
+    mapping = {}
+    for x, y in zip(a, b):
+        if x in mapping and mapping[x] != y:
+            return False
+        mapping[x] = y
+    return len(set(mapping.values())) == len(mapping)
+
+
+def test_dbscan_matches_brute_force():
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        x = np.concatenate([
+            rng.normal(0, 0.3, (12, 2)),
+            rng.normal(5, 0.3, (9, 2)),
+            rng.normal((0, 5), 0.3, (7, 2)),
+            rng.uniform(-10, 10, (4, 2)),   # noise
+        ])
+        for eps in (0.5, 1.0, 2.0):
+            got = dbscan(x, eps, min_samples=3)
+            want = _brute_force_dbscan(x, eps, 3)
+            # noise labels must agree exactly; clusters up to permutation
+            assert np.array_equal(got == -1, want == -1)
+            assert _same_partition(got[got >= 0], want[want >= 0])
+
+
+def test_ch_index_prefers_true_clustering():
+    rng = np.random.default_rng(1)
+    x = np.concatenate([rng.normal(0, 0.2, (20, 2)),
+                        rng.normal(10, 0.2, (20, 2))])
+    true = np.array([0] * 20 + [1] * 20)
+    bad = np.array(([0, 1] * 20))
+    assert calinski_harabasz(x, true) > calinski_harabasz(x, bad)
+
+
+def test_ch_degenerate_cases():
+    x = np.random.default_rng(2).normal(size=(5, 2))
+    assert calinski_harabasz(x, np.zeros(5, int)) == float("-inf")   # k=1
+    assert calinski_harabasz(x, np.arange(5)) == float("-inf")       # k=N
+
+
+def test_grid_search_separates_fast_and_slow():
+    """Two behavioural groups (fast vs slow clients) must split."""
+    rng = np.random.default_rng(3)
+    fast = np.stack([rng.normal(10, 1, 25), np.zeros(25)], 1)
+    slow = np.stack([rng.normal(100, 5, 25), np.zeros(25)], 1)
+    res = cluster_clients(np.concatenate([fast, slow]))
+    assert res.n_clusters >= 2
+    labels_fast = set(res.labels[:25])
+    labels_slow = set(res.labels[25:])
+    assert labels_fast.isdisjoint(labels_slow)
+
+
+def test_identical_clients_single_cluster():
+    x = np.ones((10, 2))
+    res = cluster_clients(x)
+    assert res.n_clusters == 1
+    assert len(set(res.labels)) == 1

@@ -1,0 +1,65 @@
+"""Unit tests: client history / cooldown (paper Eq. 1, Alg. 1)."""
+import numpy as np
+import pytest
+
+from repro.core import ClientHistoryDB, ClientRecord
+
+
+def test_cooldown_eq1_sequence():
+    rec = ClientRecord("c")
+    assert rec.cooldown == 0
+    rec.apply_miss(2)
+    assert rec.cooldown == 1            # first miss: 0 → 1
+    rec.apply_miss(4)
+    assert rec.cooldown == 2            # then ×2
+    rec.apply_miss(5)
+    assert rec.cooldown == 4
+    rec.apply_success()
+    assert rec.cooldown == 0            # completed in time → 0
+
+
+def test_tier_partition():
+    db = ClientHistoryDB()
+    db.ensure(["rookie", "part", "strag"])
+    db.mark_success("part", 0)
+    db.client_report("part", 0, 5.0)
+    db.mark_miss("strag", 0)
+    rookies, participants, stragglers = db.partition(
+        ["rookie", "part", "strag"])
+    assert [r.client_id for r in rookies] == ["rookie"]
+    assert [p.client_id for p in participants] == ["part"]
+    assert [s.client_id for s in stragglers] == ["strag"]
+
+
+def test_slow_client_corrects_missed_round():
+    """Alg. 1 lines 24-26: distinguishing slow from crashed happens on the
+    client side, by deleting the current round from missed rounds."""
+    db = ClientHistoryDB()
+    db.mark_miss("c", 3)                 # controller assumed crash
+    assert 3 in db.get("c").missed_rounds
+    db.client_report("c", 3, 42.0)       # client finished late
+    rec = db.get("c")
+    assert 3 not in rec.missed_rounds
+    assert rec.training_times == [42.0]
+    # cooldown is a controller-side attribute and stays until a success
+    assert rec.cooldown == 1
+
+
+def test_persistence_roundtrip(tmp_path):
+    db = ClientHistoryDB()
+    db.mark_success("a", 0)
+    db.client_report("a", 0, 1.5)
+    db.mark_miss("b", 0)
+    p = tmp_path / "hist.json"
+    db.save(str(p))
+    db2 = ClientHistoryDB(str(p))
+    assert db2.get("a").training_times == [1.5]
+    assert db2.get("b").cooldown == 1
+
+
+def test_rookie_definition():
+    db = ClientHistoryDB()
+    rec = db.get("x")
+    assert rec.is_rookie and not rec.is_participant and not rec.is_straggler
+    db.mark_miss("x", 0)
+    assert db.get("x").is_straggler      # behavioural data now exists

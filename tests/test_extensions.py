@@ -1,0 +1,103 @@
+"""Tests for the FedLess-faithful extensions: running-average aggregation,
+multi-platform invocation, and the pretraining driver path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ClientUpdate, RunningAggregator,
+                        staleness_aggregate)
+from repro.faas import (PLATFORM_PROFILES, ClientProfile,
+                        MultiPlatformInvoker, make_platform)
+
+
+def _upd(cid, value, n, rnd):
+    return ClientUpdate(cid, {"w": jnp.full((8,), float(value))}, n, rnd)
+
+
+# ---------------------------------------------------- running aggregation
+def test_running_aggregator_equals_batch_eq3():
+    ups = [_upd("a", 1.0, 10, 5), _upd("b", 3.0, 30, 4),
+           _upd("c", -2.0, 5, 5), _upd("old", 9.0, 50, 2)]
+    agg = RunningAggregator(current_round=5, tau=2)
+    for u in ups:
+        agg.add(u)
+    got = agg.finalize()
+    want = staleness_aggregate(ups, 5, tau=2)
+    np.testing.assert_allclose(got["w"], want["w"], rtol=1e-6)
+    assert agg.accepted == 3 and agg.rejected == 1
+
+
+def test_running_aggregator_all_stale():
+    agg = RunningAggregator(current_round=9, tau=2)
+    assert not agg.add(_upd("x", 1.0, 10, 3))
+    assert agg.finalize() is None
+
+
+def test_running_aggregator_single_fresh_is_identity():
+    agg = RunningAggregator(current_round=4, tau=2)
+    agg.add(_upd("a", 7.5, 42, 4))
+    np.testing.assert_allclose(agg.finalize()["w"], np.full(8, 7.5),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------- multi-platform
+def test_platform_profiles_distinct():
+    assert set(PLATFORM_PROFILES) == {"gcf-gen2", "aws-lambda", "openfaas"}
+    lam = make_platform("aws-lambda", seed=0)
+    ofs = make_platform("openfaas", seed=0)
+    # provider cold-start characteristics differ (lambda ≪ openfaas)
+    lam_cold = np.median([lam._cold_start_latency() for _ in range(200)])
+    ofs_cold = np.median([ofs._cold_start_latency() for _ in range(200)])
+    assert lam_cold < ofs_cold
+
+
+def test_multi_platform_invoker_routes_and_shares_clock():
+    calls = []
+
+    def work_fn(cid, params, rnd):
+        calls.append(cid)
+        return ClientUpdate(cid, {"w": jnp.zeros(2)}, 10, rnd), 5.0
+
+    inv = MultiPlatformInvoker(
+        work_fn,
+        assignment={"a": "aws-lambda", "b": "openfaas"},
+        default="gcf-gen2", seed=0)
+    res = inv.invoke_clients(["a", "b", "c"], {"w": jnp.zeros(2)}, 0, 0.0)
+    assert len(res) == 3 and calls == ["a", "b", "c"]
+    assert inv.platform_of("a") is inv.platforms["aws-lambda"]
+    assert inv.platform_of("c") is inv.platforms["gcf-gen2"]
+    # one shared virtual clock across providers
+    clocks = {id(p.clock) for p in inv.platforms.values()}
+    assert len(clocks) == 1
+
+
+def test_multi_platform_end_to_end_round():
+    """Controller runs unchanged on top of the multi-platform invoker."""
+    from repro.core import ClientHistoryDB, StrategyConfig, make_strategy
+    from repro.data import make_image_classification, partition_by_sizes
+    from repro.data.partition import lognormal_sizes
+    from repro.fl.client import ClientPool
+    from repro.fl.controller import Controller
+    from repro.fl.tasks import ClassificationTask, TaskConfig
+    from repro.models.small import make_cnn
+
+    ds = make_image_classification(400, 14, 4, seed=0)
+    parts = partition_by_sizes(ds, lognormal_sizes(8, 50, seed=0), seed=0)
+    task = ClassificationTask(make_cnn(14, 1, 4, 32),
+                              TaskConfig(epochs=1, batch_size=32))
+    history = ClientHistoryDB()
+    history.ensure(parts.keys())
+    strategy = make_strategy("fedlesscan",
+                             StrategyConfig(clients_per_round=4,
+                                            max_rounds=3), history)
+    pool = ClientPool(task, parts)
+    assignment = {cid: name for cid, name in
+                  zip(sorted(parts), ["aws-lambda", "openfaas"] * 4)}
+    inv = MultiPlatformInvoker(pool.work_fn, assignment, seed=0)
+    ctl = Controller(strategy, inv, pool, history,
+                     round_timeout_s=60.0, eval_every=0)
+    params = task.init_params(0)
+    for rnd in range(2):
+        params, stats = ctl.run_round(params, rnd)
+        assert len(stats.selected) == 4

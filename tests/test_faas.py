@@ -1,0 +1,65 @@
+"""Unit tests: simulated FaaS platform semantics."""
+import numpy as np
+
+from repro.faas import (ClientProfile, FaaSConfig, SimulatedFaaSPlatform,
+                        invocation_cost)
+from repro.faas.cost import FunctionShape
+
+
+def _platform(**kw):
+    defaults = dict(failure_rate=0.0, network_jitter_s=0.0)
+    defaults.update(kw)
+    return SimulatedFaaSPlatform(FaaSConfig(**defaults), seed=0)
+
+
+def test_cold_start_then_warm():
+    p = _platform()
+    o1 = p.invoke("c", 10.0, 0.0)
+    assert o1.cold and o1.cold_start_s > 0
+    o2 = p.invoke("c", 10.0, o1.finish_time + 1.0)
+    assert not o2.cold and o2.cold_start_s == 0.0
+    assert p.cold_starts == 1
+
+
+def test_scale_to_zero_forces_new_cold_start():
+    p = _platform(warm_idle_timeout_s=100.0)
+    o1 = p.invoke("c", 10.0, 0.0)
+    late = o1.finish_time + 101.0
+    o2 = p.invoke("c", 10.0, late)
+    assert o2.cold
+
+
+def test_function_timeout_kills():
+    p = _platform(function_timeout_s=50.0)
+    o = p.invoke("c", 500.0, 0.0)
+    assert o.crashed and o.finish_time == float("inf")
+
+
+def test_crash_profile_never_finishes():
+    p = _platform()
+    o = p.invoke("c", 1.0, 0.0, ClientProfile(crash=True))
+    assert o.crashed
+
+
+def test_slow_factor_scales_compute():
+    p1, p2 = _platform(), _platform()
+    o1 = p1.invoke("c", 10.0, 0.0)
+    o2 = p2.invoke("c", 10.0, 0.0, ClientProfile(slow_factor=3.0))
+    assert abs(o2.compute_s / o1.compute_s - 3.0) < 1e-9
+
+
+def test_failure_rate_statistics():
+    p = SimulatedFaaSPlatform(
+        FaaSConfig(failure_rate=0.2, network_jitter_s=0.0), seed=1)
+    fails = sum(p.invoke(f"c{i}", 1.0, 0.0).crashed for i in range(500))
+    assert 50 < fails < 150          # ~100 expected
+
+
+def test_gcf_cost_model_reference_values():
+    """2048 MB / 1 vCPU for 100 s ≈ 100·(0.000024 + 2·0.0000025) + inv."""
+    c = invocation_cost(100.0, FunctionShape(memory_mb=2048, vcpus=1.0))
+    expect = 100.0 * (0.0000240 + 2.0 * 0.0000025) + 0.40 / 1e6
+    assert abs(c - expect) < 1e-9
+    # billing rounds up to 100 ms
+    assert invocation_cost(0.001, FunctionShape()) == invocation_cost(
+        0.1, FunctionShape())

@@ -1,0 +1,104 @@
+"""Integration: end-to-end FL experiments on the simulated platform.
+
+These are the system-level behaviour tests: FedLesScan must beat the
+random-selection baselines on EUR / duration under stragglers (paper
+Tables II-IV directionally), and the model must actually learn.
+"""
+import numpy as np
+import pytest
+
+from repro.data import label_sorted_shards, make_image_classification
+from repro.data.synthetic import ArrayDataset
+from repro.fl.experiment import (ExperimentConfig, ScenarioConfig,
+                                 run_experiment)
+from repro.fl.tasks import ClassificationTask, TaskConfig
+from repro.models.small import make_cnn
+
+
+@pytest.fixture(scope="module")
+def setup():
+    full = make_image_classification(2400, image_size=14, n_classes=5,
+                                     seed=0)
+    train = ArrayDataset(full.x[:2000], full.y[:2000])
+    test = ArrayDataset(full.x[2000:], full.y[2000:])
+    parts = label_sorted_shards(train, 20, 2, seed=0)
+    test_parts = label_sorted_shards(test, 20, 2, seed=0)
+    model = make_cnn(14, 1, 5, 32, "tiny")
+    task = ClassificationTask(
+        model, TaskConfig(epochs=1, batch_size=32, per_sample_time_s=0.05))
+    return task, parts, test_parts
+
+
+def _run(setup, strategy, straggler_fraction, n_rounds=6, seed=0):
+    task, parts, test_parts = setup
+    cfg = ExperimentConfig(
+        strategy=strategy, n_rounds=n_rounds, clients_per_round=5,
+        eval_every=0, seed=seed,
+        scenario=ScenarioConfig(straggler_fraction=straggler_fraction,
+                                round_timeout_s=30.0, seed=seed))
+    return run_experiment(task, parts, test_parts, cfg)
+
+
+def test_standard_scenario_learns(setup):
+    res = _run(setup, "fedavg", 0.0, n_rounds=8)
+    assert res.final_accuracy > 0.5          # well above 0.2 chance
+    assert res.mean_eur > 0.9                # healthy clients succeed
+
+
+def test_fedlesscan_improves_eur_under_stragglers(setup):
+    base = _run(setup, "fedavg", 0.3)
+    ours = _run(setup, "fedlesscan", 0.3)
+    assert ours.mean_eur > base.mean_eur
+
+
+def test_fedlesscan_cheaper_and_faster_under_stragglers(setup):
+    base = _run(setup, "fedavg", 0.3)
+    ours = _run(setup, "fedlesscan", 0.3)
+    assert ours.total_cost < base.total_cost
+    assert ours.total_duration_s <= base.total_duration_s + 1e-6
+
+
+def test_fedprox_runs_with_proximal_term(setup):
+    res = _run(setup, "fedprox", 0.1, n_rounds=4)
+    assert res.final_accuracy > 0.3
+    assert res.strategy == "fedprox"
+
+
+def test_selection_counts_are_respected(setup):
+    res = _run(setup, "fedlesscan", 0.5, n_rounds=5)
+    for r in res.rounds:
+        assert len(r.selected) == 5
+        assert len(r.successes) + len(r.late) + len(r.crashed) == 5
+
+
+def test_history_drives_adaptation(setup):
+    """After a few rounds, crashing clients should be selected less often
+    than reliable ones (paper Fig. 3c: bias toward reliable clients)."""
+    task, parts, test_parts = setup
+    cfg = ExperimentConfig(
+        strategy="fedlesscan", n_rounds=12, clients_per_round=8,
+        eval_every=0, seed=1,
+        scenario=ScenarioConfig(straggler_fraction=0.4, slow_share=0.0,
+                                round_timeout_s=30.0, seed=1))
+    res = run_experiment(task, parts, test_parts, cfg)
+    counts = res.invocation_counts()
+    from repro.fl.experiment import make_straggler_profiles
+    profiles = make_straggler_profiles(sorted(parts), cfg.scenario)
+    crashed_ids = {cid for cid, p in profiles.items() if p.crash}
+    ok_ids = set(parts) - crashed_ids
+    mean_crashed = np.mean([counts.get(c, 0) for c in crashed_ids])
+    mean_ok = np.mean([counts.get(c, 0) for c in ok_ids])
+    assert mean_ok > mean_crashed
+
+
+def test_safa_tradeoff(setup):
+    """SAFA (paper §III-B): fastest rounds (k-th-fastest quorum) but far
+    more invocations and higher cost than FedLesScan — the trade-off the
+    paper criticises."""
+    safa = _run(setup, "safa", 0.3)
+    ours = _run(setup, "fedlesscan", 0.3)
+    assert safa.total_duration_s < ours.total_duration_s
+    safa_inv = sum(safa.invocation_counts().values())
+    ours_inv = sum(ours.invocation_counts().values())
+    assert safa_inv > 2 * ours_inv
+    assert safa.total_cost > ours.total_cost

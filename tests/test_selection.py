@@ -1,0 +1,74 @@
+"""Unit tests: Algorithm 2 client selection."""
+import numpy as np
+
+from repro.core import ClientHistoryDB, select_clients
+
+
+def _db_with(n_rookies=0, n_participants=0, n_stragglers=0, rounds=5):
+    db = ClientHistoryDB()
+    ids = []
+    for i in range(n_rookies):
+        cid = f"rook{i}"
+        db.ensure([cid])
+        ids.append(cid)
+    for i in range(n_participants):
+        cid = f"part{i}"
+        for r in range(rounds):
+            db.mark_success(cid, r)
+            db.client_report(cid, r, 10.0 + i)
+        ids.append(cid)
+    for i in range(n_stragglers):
+        cid = f"strag{i}"
+        db.mark_miss(cid, rounds - 1)
+        ids.append(cid)
+    return db, ids
+
+
+def test_rookies_first():
+    db, ids = _db_with(n_rookies=20, n_participants=5)
+    plan = select_clients(db, ids, 1, 50, 8, np.random.default_rng(0))
+    assert len(plan.selected) == 8
+    assert all(c.startswith("rook") for c in plan.selected)
+
+
+def test_stragglers_only_when_needed():
+    db, ids = _db_with(n_participants=10, n_stragglers=5)
+    rng = np.random.default_rng(0)
+    plan = select_clients(db, ids, 6, 50, 8, rng)
+    # 10 participants cover the demand: no stragglers selected
+    assert not any(c.startswith("strag") for c in plan.selected)
+    plan2 = select_clients(db, ids, 6, 50, 13, rng)
+    # now 3 stragglers are required to fill the round
+    assert sum(c.startswith("strag") for c in plan2.selected) == 3
+
+
+def test_selection_size_and_uniqueness():
+    db, ids = _db_with(n_rookies=3, n_participants=9, n_stragglers=4)
+    for rnd in (1, 10, 49):
+        plan = select_clients(db, ids, rnd, 50, 10,
+                              np.random.default_rng(rnd))
+        assert len(plan.selected) == 10
+        assert len(set(plan.selected)) == 10
+        assert set(plan.selected) <= set(ids)
+
+
+def test_selection_caps_at_population():
+    db, ids = _db_with(n_participants=4)
+    plan = select_clients(db, ids, 2, 50, 10, np.random.default_rng(0))
+    assert sorted(plan.selected) == sorted(ids)
+
+
+def test_least_invoked_preferred_within_cluster():
+    """Paper §VI-B: FedLesScan prioritises clients with the fewest
+    invocations inside a selected cluster."""
+    db = ClientHistoryDB()
+    ids = [f"c{i}" for i in range(6)]
+    for r in range(4):
+        for cid in ids:
+            db.mark_success(cid, r)
+            db.client_report(cid, r, 10.0)     # identical behaviour
+    # give c0..c2 extra invocations
+    for cid in ids[:3]:
+        db.get(cid).invocations += 5
+    plan = select_clients(db, ids, 5, 50, 3, np.random.default_rng(0))
+    assert sorted(plan.selected) == ["c3", "c4", "c5"]

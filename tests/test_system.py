@@ -1,0 +1,103 @@
+"""End-to-end behaviour: dry-run machinery on a tiny mesh (1 CPU device).
+
+The production 512-device dry-run runs via `python -m repro.launch.dryrun`
+in its own process (XLA device-count flag must be set before jax init);
+here we verify the same build/lower/compile path works on the host mesh,
+plus the HLO collective parser on a known program.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.shapes import InputShape
+from repro.launch.hlo_analysis import (Roofline, collective_summary,
+                                       parse_collectives)
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs import build_step
+
+
+TINY_SHAPES = {
+    "train": InputShape("train_tiny", 32, 4, "train"),
+    "prefill": InputShape("prefill_tiny", 32, 2, "prefill"),
+    "decode": InputShape("decode_tiny", 32, 2, "decode"),
+}
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "mamba2-130m", "arctic-480b"])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_build_lower_compile_host_mesh(arch, kind):
+    cfg = get_config(arch).reduced()
+    shape = TINY_SHAPES[kind]
+    mesh = make_host_mesh()
+    with mesh:
+        jf, args = build_step(cfg, shape, mesh)
+        compiled = jf.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    assert float(cost.get("flops", 0)) > 0
+
+
+def test_collective_parser_on_psum_program():
+    mesh = make_host_mesh()
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def f(x):
+        return jax.lax.with_sharding_constraint(
+            x.sum(), NamedSharding(mesh, P()))
+
+    x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    with mesh:
+        jf = jax.jit(f, in_shardings=NamedSharding(mesh, P(None, None)))
+        hlo = jf.lower(x).compile().as_text()
+    ops = parse_collectives(hlo)       # 1-device mesh: likely no collectives
+    summary = collective_summary(ops)
+    assert summary["total_wire_bytes"] >= 0.0
+
+
+def test_collective_parser_synthetic_hlo():
+    hlo = '''
+HloModule test
+%body (p: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %ag = f32[16,128]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %t = tuple(...)
+}
+%cond (p: (s32[], f32[16,128])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%iv, %c), direction=LT
+}
+ENTRY %main (a: f32[16,128]) -> f32[16,128] {
+  %w = (s32[], f32[16,128]) while(%init), condition=%cond, body=%body
+  %ar = f32[4,128]{1,0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%sum
+  ROOT %r = f32[16,128] get-tuple-element(%w), index=1
+}
+'''
+    ops = parse_collectives(hlo)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce"]
+    ag = next(o for o in ops if o.kind == "all-gather")
+    assert ag.trip_count == 12                       # scan body multiplied
+    assert ag.shape_bytes == 16 * 128 * 4
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    assert ar.trip_count == 1
+    assert ar.wire_bytes == pytest.approx(2 * 3 / 4 * 4 * 128 * 4)
+
+
+def test_roofline_terms():
+    r = Roofline(flops=197e12, hbm_bytes=819e9, wire_bytes=25e9,
+                 model_flops=197e12 * 256, chips=256)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.dominant in ("compute", "memory")
+    assert r.useful_flops_ratio == pytest.approx(1.0)
+
+
+def test_input_shapes_assignment():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
