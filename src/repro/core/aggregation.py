@@ -7,11 +7,21 @@ in, n_k the client dataset cardinality and n the total cardinality of the
 aggregated clients.  Updates with t − t_k ≥ τ are discarded (τ = 2 in the
 paper).  For t_k = t the scheme reduces exactly to FedAvg.
 
-Updates are JAX pytrees; the weighted sum is jit'd and distributable
-(pjit over the mesh) and has a Pallas kernel twin in kernels/fed_agg.py.
+Updates are JAX pytrees.  `aggregate` has two paths:
+
+  * the **flattened fast path** (default): every update is ravelled into
+    one flat vector, the K vectors stacked into a (K, P) matrix, and the
+    whole weighted sum dispatched as a single Pallas `fed_agg` kernel
+    call (kernels/fed_agg.py — lowered to Mosaic on TPU; on CPU it runs
+    through the Pallas interpreter, which validates the kernel but is
+    slower than the reference path), then unravelled back to the
+    original tree structure;
+  * the per-leaf `tree_map` reference path, kept for validation and as
+    the fallback for exotic pytrees.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, List, Optional, Sequence
@@ -19,8 +29,13 @@ from typing import Any, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.flatten_util import ravel_pytree
 
 Pytree = Any
+
+# flip with REPRO_AGG_KERNEL=0 to force the tree_map reference path
+_KERNEL_DEFAULT = os.environ.get("REPRO_AGG_KERNEL", "1") != "0"
+_KERNEL_WARNED = False
 
 
 @dataclass
@@ -62,10 +77,43 @@ def staleness_coefficients(updates: Sequence[ClientUpdate],
         dtype=np.float64)
 
 
-def aggregate(updates: Sequence[ClientUpdate],
-              coeffs: np.ndarray) -> Pytree:
+def aggregate_reference(updates: Sequence[ClientUpdate],
+                        coeffs: np.ndarray) -> Pytree:
+    """Per-leaf tree_map weighted sum (the validation twin)."""
     stacked = _stack([u.params for u in updates])
     return _weighted_sum(stacked, jnp.asarray(coeffs, dtype=jnp.float32))
+
+
+def _aggregate_flat(updates: Sequence[ClientUpdate],
+                    coeffs: np.ndarray) -> Pytree:
+    """Ravel K update pytrees into a (K, P) matrix and run the weighted
+    sum as one Pallas kernel dispatch, then unravel the result."""
+    from ..kernels import fed_agg   # deferred: kernels pull in pallas
+
+    first, unravel = ravel_pytree(updates[0].params)
+    mat = jnp.stack([first] + [ravel_pytree(u.params)[0]
+                               for u in updates[1:]])
+    out = fed_agg(mat, jnp.asarray(coeffs, dtype=jnp.float32))
+    return unravel(out.astype(first.dtype))
+
+
+def aggregate(updates: Sequence[ClientUpdate], coeffs: np.ndarray,
+              use_kernel: Optional[bool] = None) -> Pytree:
+    """Weighted sum Σ_k c_k · W_k over client updates."""
+    if use_kernel is None:
+        use_kernel = _KERNEL_DEFAULT
+    if use_kernel:
+        try:
+            return _aggregate_flat(updates, coeffs)
+        except (TypeError, ValueError) as e:
+            # exotic pytrees that ravel_pytree/stack can't flatten
+            global _KERNEL_WARNED
+            if not _KERNEL_WARNED:
+                _KERNEL_WARNED = True
+                import warnings
+                warnings.warn(f"fed_agg kernel path fell back to the "
+                              f"tree_map reference path: {e}")
+    return aggregate_reference(updates, coeffs)
 
 
 def fedavg_aggregate(updates: Sequence[ClientUpdate]) -> Pytree:

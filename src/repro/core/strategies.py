@@ -43,15 +43,56 @@ class Strategy:
         self.rng = np.random.default_rng(seed)
         self.update_store = UpdateStore(tau=config.tau)
         self.last_plan: Optional[SelectionPlan] = None
+        self.last_aggregate_count = 0   # updates actually merged last round
 
     # ---- selection ------------------------------------------------------
     def select(self, client_ids: Sequence[str], round_number: int) -> List[str]:
         raise NotImplementedError
 
+    # ---- event hooks (controller is an event consumer) ------------------
+    def on_client_finish(self, update: Optional[ClientUpdate],
+                         arrival_time: float, producing_round: int,
+                         current_round: int) -> None:
+        """A client's update physically arrived at `arrival_time` (virtual).
+
+        Same-round arrivals are collected by the controller and passed to
+        `aggregate` at round close; an arrival from an *earlier* round is a
+        straggler's update landing mid-flight — semi-async strategies cache
+        it at its true arrival time, synchronous ones discard it.
+        """
+        if (self.semi_async and update is not None
+                and producing_round < current_round):
+            self.accept_late_update(update, arrival_time=arrival_time)
+
+    def on_round_close(self, round_number: int,
+                       now: Optional[float] = None) -> None:
+        """Called at the round's close time, before aggregation."""
+
+    def _staleness_merge(self, updates: Sequence[ClientUpdate],
+                         round_number: int,
+                         now: Optional[float]) -> Optional[Pytree]:
+        """Shared semi-async aggregation body: merge the round's in-time
+        updates with cached late updates that have arrived by `now`
+        (pop_for_round already enforces the τ cutoff), apply Eq. 3."""
+        pending = self.update_store.pop_for_round(round_number, now)
+        merged = list(updates) + pending
+        self.last_aggregate_count = len(merged)
+        if not merged:
+            return None
+        return staleness_aggregate(merged, round_number,
+                                   tau=self.config.tau)
+
+    def accept_late_update(self, update: ClientUpdate,
+                           arrival_time: float = 0.0) -> None:
+        """Semi-async path: a straggler finished after its round closed;
+        its update is cached and dampened into a later aggregation."""
+        self.update_store.push(update, arrival_time)
+
     # ---- aggregation ----------------------------------------------------
     def aggregate(self, updates: Sequence[ClientUpdate], round_number: int,
                   now: Optional[float] = None) -> Optional[Pytree]:
         """Return the new global model or None (keep previous)."""
+        self.last_aggregate_count = len(updates)
         if not updates:
             return None
         return fedavg_aggregate(list(updates))
@@ -104,17 +145,7 @@ class FedLesScan(Strategy):
     def aggregate(self, updates, round_number, now=None):
         # include late updates from previous rounds that have ARRIVED by
         # now (in-flight ones stay queued; aged-out ones are dropped)
-        pending = self.update_store.pop_for_round(round_number, now)
-        merged = list(updates) + pending
-        if not merged:
-            return None
-        return staleness_aggregate(merged, round_number, tau=self.config.tau)
-
-    def accept_late_update(self, update: ClientUpdate,
-                           arrival_time: float = 0.0) -> None:
-        """Semi-async path: a straggler finished after its round closed;
-        its update is cached and dampened into a later aggregation."""
-        self.update_store.push(update, arrival_time)
+        return self._staleness_merge(updates, round_number, now)
 
 
 class SAFA(Strategy):
@@ -137,16 +168,7 @@ class SAFA(Strategy):
         return list(client_ids)
 
     def aggregate(self, updates, round_number, now=None):
-        pending = self.update_store.pop_for_round(round_number, now)
-        merged = list(updates) + pending
-        if not merged:
-            return None
-        return staleness_aggregate(merged, round_number,
-                                   tau=self.config.tau)
-
-    def accept_late_update(self, update: ClientUpdate,
-                           arrival_time: float = 0.0) -> None:
-        self.update_store.push(update, arrival_time)
+        return self._staleness_merge(updates, round_number, now)
 
 
 STRATEGIES = {cls.name: cls for cls in (FedAvg, FedProx, FedLesScan, SAFA)}

@@ -1,14 +1,21 @@
-"""Simulated serverless substrate: platform, invoker, GCF cost model."""
+"""Simulated serverless substrate: event queue, platforms, fleet, invoker,
+GCF cost model."""
 from .cost import CostMeter, FunctionShape, PriceBook, invocation_cost
-from .invoker import InvocationResult, MockInvoker
+from .events import Event, EventKind, EventQueue
+from .fleet import PlatformFleet, RoutingPolicy
+from .invoker import (ClientCompletion, InvocationEngine, InvocationResult,
+                      MockInvoker)
 from .profiles import (PLATFORM_PROFILES, MultiPlatformInvoker,
                        make_platform)
 from .platform import (ClientProfile, FaaSConfig, InvocationOutcome,
-                       SimulatedFaaSPlatform, VirtualClock)
+                       InvocationPlan, SimulatedFaaSPlatform, VirtualClock)
 
 __all__ = [
     "CostMeter", "FunctionShape", "PriceBook", "invocation_cost",
-    "InvocationResult", "MockInvoker", "ClientProfile", "FaaSConfig",
-    "InvocationOutcome", "SimulatedFaaSPlatform", "VirtualClock",
+    "Event", "EventKind", "EventQueue",
+    "PlatformFleet", "RoutingPolicy",
+    "ClientCompletion", "InvocationEngine", "InvocationResult", "MockInvoker",
+    "ClientProfile", "FaaSConfig", "InvocationOutcome", "InvocationPlan",
+    "SimulatedFaaSPlatform", "VirtualClock",
     "PLATFORM_PROFILES", "MultiPlatformInvoker", "make_platform",
 ]

@@ -1,0 +1,105 @@
+"""Discrete-event core of the serverless simulation.
+
+The seed simulated each round as "invoke everyone at t0, compute every
+finish time eagerly, filter at the deadline".  That shape cannot express
+the behaviours the paper's claims rest on: retries (FedLess re-invokes
+failed clients), per-round concurrency limits, warm instances expiring
+*between* invocations, or a straggler's update physically arriving while
+a *later* round is already running (Apodotiko-style true event ordering).
+
+This module provides the deterministic event queue those behaviours hang
+off: a binary heap keyed by ``(time, seq)`` over the existing
+`VirtualClock`, where ``seq`` is a monotone schedule counter.  Two runs
+with the same seeds schedule the same events in the same order and
+therefore replay identically — determinism is a property of the key, not
+of wall-clock luck.
+
+Event kinds model the lifecycle of one serverless invocation:
+
+    INVOKE_START      the invoker fires the HTTP request (or a retry)
+    COLD_START_DONE   a cold instance finished booting (telemetry)
+    CLIENT_FINISH     the client function returned its update
+    PLATFORM_FAILURE  the platform reported an error / timeout kill
+    WARM_EXPIRY       an idle warm instance scales to zero
+    ROUND_DEADLINE    the controller's round timer fired
+"""
+from __future__ import annotations
+
+import enum
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from .platform import VirtualClock
+
+
+class EventKind(enum.Enum):
+    INVOKE_START = "invoke_start"
+    COLD_START_DONE = "cold_start_done"
+    CLIENT_FINISH = "client_finish"
+    PLATFORM_FAILURE = "platform_failure"
+    WARM_EXPIRY = "warm_expiry"
+    ROUND_DEADLINE = "round_deadline"
+
+
+@dataclass
+class Event:
+    time: float
+    seq: int                       # schedule order — deterministic tiebreak
+    kind: EventKind
+    client_id: Optional[str] = None
+    round_number: Optional[int] = None
+    data: Dict[str, Any] = field(default_factory=dict)
+    cancelled: bool = False
+
+    def cancel(self) -> None:
+        """Lazy cancellation: the heap entry stays, `pop` skips it."""
+        self.cancelled = True
+
+
+class EventQueue:
+    """Deterministic future-event list on a shared `VirtualClock`.
+
+    `pop` advances the clock to the popped event's time, so virtual time
+    only ever moves at event boundaries and every consumer observes the
+    same timeline.  Popped events are appended to `trace` — tests assert
+    on it and it doubles as a simulation log.
+    """
+
+    def __init__(self, clock: Optional[VirtualClock] = None):
+        self.clock = clock or VirtualClock()
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+        self.trace: List[Event] = []
+
+    # ------------------------------------------------------------------
+    def schedule(self, time: float, kind: EventKind,
+                 client_id: Optional[str] = None,
+                 round_number: Optional[int] = None, **data: Any) -> Event:
+        ev = Event(time=float(time), seq=next(self._seq), kind=kind,
+                   client_id=client_id, round_number=round_number, data=data)
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        return ev
+
+    def pop(self) -> Optional[Event]:
+        """Next live event (clock advances to it), or None when drained."""
+        while self._heap:
+            _, _, ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            self.clock.advance_to(ev.time)
+            self.trace.append(ev)
+            return ev
+        return None
+
+    def peek_time(self) -> Optional[float]:
+        while self._heap and self._heap[0][2].cancelled:
+            heapq.heappop(self._heap)
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return sum(1 for _, _, ev in self._heap if not ev.cancelled)
+
+    def __bool__(self) -> bool:
+        return len(self) > 0

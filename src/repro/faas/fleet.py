@@ -1,0 +1,139 @@
+"""Multi-provider platform fleet + routing policy.
+
+FedLess is cloud-agnostic (paper §III-A): one experiment's clients may
+live on GCF, AWS Lambda and a self-hosted OpenFaaS cluster at the same
+time.  `PlatformFleet` holds a set of *named* `SimulatedFaaSPlatform`s
+with distinct `FaaSConfig`/`FunctionShape`/`PriceBook` profiles, all
+sharing one `VirtualClock`, and a `RoutingPolicy` that decides which
+provider serves which client — so the controller stays completely
+provider-agnostic while the simulation reproduces per-provider cold-start
+spectra, SLOs, scale-to-zero windows and price books.
+
+Routing modes:
+
+  * ``sticky``       — explicit client→platform assignment with a default
+                        (FedLess deployment files pin each client);
+  * ``round-robin``  — unassigned clients are spread across providers in
+                        deterministic rotation (multi-region load spread);
+  * ``random``       — seeded random choice per new client (then sticky).
+
+Regional-outage scenarios: `set_platform_down` marks a provider as
+failing every invocation (failure_rate = 1), which the retry machinery in
+the invoker then observes as repeated PLATFORM_FAILURE events.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Dict, Iterable, Optional, Sequence
+
+import numpy as np
+
+from .platform import SimulatedFaaSPlatform, VirtualClock
+
+
+class RoutingPolicy:
+    """Maps client ids to platform names; decisions are sticky so a
+    client's warm instances stay meaningful across rounds."""
+
+    def __init__(self, platform_names: Sequence[str],
+                 assignment: Optional[Dict[str, str]] = None,
+                 default: Optional[str] = None,
+                 mode: str = "sticky", seed: int = 0):
+        if not platform_names:
+            raise ValueError("RoutingPolicy needs at least one platform")
+        self.platform_names = list(platform_names)
+        self.assignment = dict(assignment or {})
+        self.default = default or self.platform_names[0]
+        if self.default not in self.platform_names:
+            raise ValueError(f"default platform {self.default!r} not in "
+                             f"{self.platform_names}")
+        if mode not in ("sticky", "round-robin", "random"):
+            raise ValueError(f"unknown routing mode {mode!r}")
+        self.mode = mode
+        self._rr = 0
+        self._rng = np.random.default_rng(seed)
+
+    def route(self, client_id: str) -> str:
+        name = self.assignment.get(client_id)
+        if name is not None:
+            return name
+        if self.mode == "round-robin":
+            name = self.platform_names[self._rr % len(self.platform_names)]
+            self._rr += 1
+        elif self.mode == "random":
+            name = str(self._rng.choice(self.platform_names))
+        else:
+            name = self.default
+        self.assignment[client_id] = name      # sticky from now on
+        return name
+
+
+class PlatformFleet:
+    """Named platforms + routing on one shared virtual clock."""
+
+    def __init__(self, platforms: Dict[str, SimulatedFaaSPlatform],
+                 routing: Optional[RoutingPolicy] = None):
+        if not platforms:
+            raise ValueError("PlatformFleet needs at least one platform")
+        self.platforms = dict(platforms)
+        self.routing = routing or RoutingPolicy(list(self.platforms))
+        self.clock = VirtualClock()
+        for p in self.platforms.values():
+            p.clock = self.clock
+        self._saved_failure_rates: Dict[str, float] = {}
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_profiles(cls, names: Optional[Iterable[str]] = None,
+                      routing: Optional[RoutingPolicy] = None,
+                      seed: int = 0) -> "PlatformFleet":
+        """Build a fleet from the provider profile book (faas/profiles.py).
+
+        Each platform gets a distinct RNG stream (seed + index) so
+        provider timing draws are independent but reproducible.
+        """
+        from .profiles import PLATFORM_PROFILES   # circular-free at call time
+        names = list(names) if names is not None else list(PLATFORM_PROFILES)
+        platforms = {}
+        for i, name in enumerate(names):
+            prof = PLATFORM_PROFILES[name]
+            platforms[name] = SimulatedFaaSPlatform(
+                prof["faas"], prof["shape"], seed=seed + i, name=name)
+        return cls(platforms, routing)
+
+    # ------------------------------------------------------------------
+    def platform_of(self, client_id: str) -> SimulatedFaaSPlatform:
+        return self.platforms[self.routing.route(client_id)]
+
+    def name_of(self, client_id: str) -> str:
+        return self.routing.route(client_id)
+
+    @property
+    def default_platform(self) -> SimulatedFaaSPlatform:
+        return self.platforms[self.routing.default]
+
+    # ---- scenario knobs ----------------------------------------------
+    def set_platform_down(self, name: str, down: bool = True) -> None:
+        """Regional outage: every invocation on `name` fails (SLO → 0)."""
+        p = self.platforms[name]
+        if down:
+            self._saved_failure_rates.setdefault(name, p.config.failure_rate)
+            p.config = replace(p.config, failure_rate=1.0)
+        elif name in self._saved_failure_rates:
+            p.config = replace(
+                p.config, failure_rate=self._saved_failure_rates.pop(name))
+
+    # ---- fleet-wide telemetry ----------------------------------------
+    @property
+    def invocations(self) -> int:
+        return sum(p.invocations for p in self.platforms.values())
+
+    @property
+    def cold_starts(self) -> int:
+        return sum(p.cold_starts for p in self.platforms.values())
+
+    def utilisation(self) -> Dict[str, Dict[str, int]]:
+        return {name: {"invocations": p.invocations,
+                       "cold_starts": p.cold_starts,
+                       "warm_instances": p.warm_instance_count()}
+                for name, p in self.platforms.items()}

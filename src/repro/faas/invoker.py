@@ -5,14 +5,29 @@ on one machine by simulating the behaviour of the deployed client
 functions, while executing the clients' actual training code so that the
 produced model updates are real.  The controller code path is identical to
 what a live-HTTP invoker would use.
+
+Two layers live here:
+
+  * `MockInvoker` — the per-client work + platform routing surface
+    (single platform; `faas.profiles.MultiPlatformInvoker` is the fleet
+    twin).  Its legacy `invoke_clients` batch API is kept for direct
+    tests and external callers.
+  * `InvocationEngine` — the event-driven scheduler the controller now
+    drives.  It turns each invocation into lifecycle events on the
+    shared `EventQueue`, enforces a per-round concurrency cap, and
+    re-invokes transiently failed clients up to `max_retries` times (the
+    FedLess invoker's retry behaviour) — every attempt billed.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.aggregation import ClientUpdate
-from .platform import (ClientProfile, InvocationOutcome,
+from .events import Event, EventKind, EventQueue
+from .platform import (FAIL_PLATFORM, FAIL_TIMEOUT, ClientProfile,
+                       InvocationOutcome, InvocationPlan,
                        SimulatedFaaSPlatform)
 
 Pytree = Any
@@ -26,6 +41,21 @@ ClientWorkFn = Callable[[str, Pytree, int], tuple]
 class InvocationResult:
     outcome: InvocationOutcome
     update: Optional[ClientUpdate]  # None when the invocation crashed
+
+
+@dataclass
+class ClientCompletion:
+    """Terminal result of one logical invocation (all attempts included)."""
+    round_number: int
+    client_id: str
+    outcome: InvocationOutcome
+    update: Optional[ClientUpdate]          # None when terminally failed
+    attempts: int = 1
+    failed_attempts: List[InvocationOutcome] = field(default_factory=list)
+
+    @property
+    def success(self) -> bool:
+        return not self.outcome.crashed
 
 
 class MockInvoker:
@@ -42,6 +72,9 @@ class MockInvoker:
         self.work_fn = work_fn
         self.profiles = profiles or {}
 
+    def platform_of(self, client_id: str) -> SimulatedFaaSPlatform:
+        return self.platform
+
     def invoke_clients(self, client_ids: Sequence[str], global_params: Pytree,
                        round_number: int,
                        start_time: float) -> List[InvocationResult]:
@@ -57,3 +90,235 @@ class MockInvoker:
             results.append(InvocationResult(
                 outcome=outcome, update=None if outcome.crashed else update))
         return results
+
+
+# ======================================================================
+class _RoundState:
+    """Per-round scheduling state inside the engine."""
+
+    def __init__(self, round_number: int, client_ids: Sequence[str],
+                 global_params: Pytree):
+        self.round_number = round_number
+        self.client_ids = list(client_ids)
+        self.global_params = global_params
+        self.waiting: deque = deque()            # cap overflow, not yet fired
+        self.active = 0                          # invocations in flight
+        self.attempts: Dict[str, int] = {}
+        self.failed: Dict[str, List[InvocationOutcome]] = {}
+        # cid -> (plan, update, [scheduled events])
+        self.inflight: Dict[str, Tuple[InvocationPlan,
+                                       Optional[ClientUpdate], list]] = {}
+        self.work: Dict[str, tuple] = {}         # cid -> (update, nominal_s)
+        self.retrying: set = set()               # retry fired, not restarted
+        self.done: set = set()
+        self.closed = False
+
+
+class InvocationEngine:
+    """Event-driven invocation scheduler over any invoker that exposes
+    `platform_of(cid)`, `work_fn` and `profiles`.
+
+    The engine owns the invocation lifecycle; the controller owns round
+    semantics (deadline, history, cost, aggregation) and consumes the
+    `ClientCompletion`s the engine emits from `handle()`.
+    """
+
+    def __init__(self, invoker, max_retries: int = 1,
+                 max_concurrency: Optional[int] = None,
+                 retry_on_timeout: bool = False):
+        self.invoker = invoker
+        self.max_retries = max_retries
+        self.max_concurrency = max_concurrency
+        self.retry_on_timeout = retry_on_timeout
+        self._rounds: Dict[int, _RoundState] = {}
+
+    # ------------------------------------------------------------------
+    def open_round(self, queue: EventQueue, client_ids: Sequence[str],
+                   global_params: Pytree, round_number: int,
+                   start_time: float,
+                   precomputed: Optional[Dict[str, tuple]] = None) -> None:
+        """Schedule the round's invocations; at most `max_concurrency` are
+        in flight at once, the rest start as earlier ones resolve."""
+        st = _RoundState(round_number, client_ids, global_params)
+        if precomputed:
+            st.work.update(precomputed)
+        self._rounds[round_number] = st
+        cap = self.max_concurrency or len(st.client_ids)
+        for cid in st.client_ids[:cap]:
+            self._fire(queue, st, cid, start_time)
+        st.waiting.extend(st.client_ids[cap:])
+
+    def _fire(self, queue: EventQueue, st: _RoundState, cid: str,
+              when: float) -> None:
+        st.active += 1
+        queue.schedule(when, EventKind.INVOKE_START, client_id=cid,
+                       round_number=st.round_number)
+
+    # ------------------------------------------------------------------
+    def handle(self, queue: EventQueue,
+               event: Event) -> Optional[ClientCompletion]:
+        """Process one event; returns a ClientCompletion when an
+        invocation reached a terminal state (success or retries
+        exhausted), else None."""
+        kind = event.kind
+        if kind is EventKind.INVOKE_START:
+            self._start(queue, event)
+        elif kind is EventKind.CLIENT_FINISH:
+            return self._finish(queue, event)
+        elif kind is EventKind.PLATFORM_FAILURE:
+            return self._failure(queue, event)
+        elif kind is EventKind.WARM_EXPIRY:
+            platform = event.data.get("platform")
+            if platform is not None:
+                platform.expire_warm(event.client_id, event.time)
+        # COLD_START_DONE / ROUND_DEADLINE: telemetry / controller-owned
+        return None
+
+    # ------------------------------------------------------------------
+    def _start(self, queue: EventQueue, event: Event) -> None:
+        st = self._rounds.get(event.round_number)
+        if st is None or st.closed:
+            return      # round closed between scheduling and firing
+        cid = event.client_id
+        st.retrying.discard(cid)
+        profile = self.invoker.profiles.get(cid, ClientProfile())
+        platform = self.invoker.platform_of(cid)
+
+        if profile.crash:
+            update, nominal_s = None, 0.0
+        elif cid in st.work:
+            update, nominal_s = st.work[cid]
+        else:
+            update, nominal_s = self.invoker.work_fn(
+                cid, st.global_params, st.round_number)
+            st.work[cid] = (update, nominal_s)
+
+        attempt = st.attempts.get(cid, 0)
+        plan = platform.plan_invocation(cid, nominal_s, event.time, profile,
+                                        attempt=attempt)
+        scheduled: list = []
+        if plan.cold and plan.cold_start_s > 0:
+            scheduled.append(queue.schedule(
+                event.time + plan.cold_start_s, EventKind.COLD_START_DONE,
+                client_id=cid, round_number=st.round_number,
+                platform=platform.name))
+        if plan.failure is None:
+            scheduled.append(queue.schedule(
+                plan.finish_time, EventKind.CLIENT_FINISH, client_id=cid,
+                round_number=st.round_number))
+            queue.schedule(plan.warm_until, EventKind.WARM_EXPIRY,
+                           client_id=cid, platform=platform)
+        elif plan.fail_time != float("inf"):
+            scheduled.append(queue.schedule(
+                plan.fail_time, EventKind.PLATFORM_FAILURE, client_id=cid,
+                round_number=st.round_number, reason=plan.failure))
+        # FAIL_CRASH: no event — discovered at the round deadline
+        st.inflight[cid] = (plan, update, scheduled)
+
+    # ------------------------------------------------------------------
+    def _finish(self, queue: EventQueue,
+                event: Event) -> Optional[ClientCompletion]:
+        st = self._rounds.get(event.round_number)
+        if st is None or event.client_id not in st.inflight:
+            return None     # resolved at a round close; stale event
+        cid = event.client_id
+        plan, update, _ = st.inflight.pop(cid)
+        st.done.add(cid)
+        self._release_slot(queue, st, event.time)
+        completion = ClientCompletion(
+            round_number=st.round_number, client_id=cid,
+            outcome=plan.to_outcome(), update=update,
+            attempts=st.attempts.get(cid, 0) + 1,
+            failed_attempts=st.failed.get(cid, []))
+        self._maybe_gc(st)
+        return completion
+
+    def _failure(self, queue: EventQueue,
+                 event: Event) -> Optional[ClientCompletion]:
+        st = self._rounds.get(event.round_number)
+        if st is None or event.client_id not in st.inflight:
+            return None
+        cid = event.client_id
+        plan, update, _ = st.inflight.pop(cid)
+        outcome = plan.to_outcome()
+        st.failed.setdefault(cid, []).append(outcome)
+        attempt = st.attempts.get(cid, 0)
+
+        retryable = (plan.failure == FAIL_PLATFORM
+                     or (plan.failure == FAIL_TIMEOUT
+                         and self.retry_on_timeout))
+        if retryable and attempt < self.max_retries and not st.closed:
+            # FedLess invoker behaviour: immediately re-invoke (same slot,
+            # attempt counter bumped; every attempt is billed separately).
+            st.attempts[cid] = attempt + 1
+            st.retrying.add(cid)
+            queue.schedule(event.time, EventKind.INVOKE_START, client_id=cid,
+                           round_number=st.round_number)
+            return None
+
+        st.done.add(cid)
+        self._release_slot(queue, st, event.time)
+        completion = ClientCompletion(
+            round_number=st.round_number, client_id=cid, outcome=outcome,
+            update=None, attempts=attempt + 1,
+            failed_attempts=st.failed.get(cid, [])[:-1])
+        self._maybe_gc(st)
+        return completion
+
+    def _release_slot(self, queue: EventQueue, st: _RoundState,
+                      now: float) -> None:
+        st.active -= 1
+        if st.waiting and not st.closed:
+            self._fire(queue, st, st.waiting.popleft(), now)
+
+    # ------------------------------------------------------------------
+    def close_round(self, round_number: int,
+                    now: float) -> Tuple[List[str], List[str], List[str]]:
+        """Round deadline bookkeeping.  Returns
+
+            (late, dead, unstarted)
+
+        * late      — in flight with a live CLIENT_FINISH in the future:
+                      the client is alive, its update will arrive
+                      mid-flight during a later round;
+        * dead      — in flight with no pending finish (crash profiles,
+                      not-yet-observed timeout kills): cancelled;
+        * unstarted — never fired because of the concurrency cap.
+        """
+        st = self._rounds.get(round_number)
+        if st is None:
+            return [], [], []
+        st.closed = True
+        late, dead = [], []
+        for cid, (plan, _upd, scheduled) in list(st.inflight.items()):
+            if plan.failure is None and plan.finish_time > now:
+                late.append(cid)
+                continue
+            dead.append(cid)
+            for ev in scheduled:
+                ev.cancel()
+            del st.inflight[cid]
+            st.done.add(cid)
+        # a retry whose INVOKE_START is still queued at close never runs
+        # (the start handler drops it): the client missed the round
+        dead.extend(sorted(st.retrying))
+        st.done.update(st.retrying)
+        st.retrying.clear()
+        unstarted = list(st.waiting)
+        st.waiting.clear()
+        st.done.update(unstarted)
+        self._maybe_gc(st)
+        return late, dead, unstarted
+
+    def unresolved_count(self, round_number: int) -> int:
+        """Clients of the round that could still produce an event: in
+        flight, waiting on a slot, or mid-retry.  Crash-profile clients
+        count — the controller cannot observe that they never respond."""
+        st = self._rounds.get(round_number)
+        if st is None:
+            return 0
+        return len(st.inflight) + len(st.waiting) + len(st.retrying)
+
+    def _maybe_gc(self, st: _RoundState) -> None:
+        if st.closed and not st.inflight and not st.waiting:
+            self._rounds.pop(st.round_number, None)

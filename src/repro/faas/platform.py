@@ -12,10 +12,15 @@ stragglers behave differently in FaaS (§II, §III-C):
     (GCF SLO: 99.95% uptime);
   * function timeout — invocations are killed at the platform limit.
 
-Everything runs on a virtual clock: `invoke()` returns the *would-be*
-finish time instead of sleeping, so a full FL experiment with hundreds of
-clients simulates in milliseconds while preserving the timing structure
-the scheduling strategy reacts to.
+Everything runs on a virtual clock.  The platform does not sleep or
+block: `plan_invocation()` samples the full timing of one invocation
+(cold start, landed-instance speed, jitter, failure mode) and returns an
+`InvocationPlan` the event engine turns into INVOKE_START /
+COLD_START_DONE / CLIENT_FINISH / PLATFORM_FAILURE / WARM_EXPIRY events,
+so a full FL experiment with hundreds of clients simulates in
+milliseconds while preserving the timing structure the scheduling
+strategy reacts to.  `invoke()` remains as the one-shot convenience
+wrapper (plan + outcome in one call) for direct platform tests.
 """
 from __future__ import annotations
 
@@ -53,13 +58,76 @@ class InvocationOutcome:
     crashed: bool               # platform-level failure or timeout kill
     finish_time: float          # = start + cold + compute + jitter (inf if crashed)
     cold: bool
+    function_timeout_s: float = float("inf")
 
     @property
     def duration_s(self) -> float:
-        """Billable duration (platform bills until kill on timeout)."""
+        """Billable duration.  The platform kills the instance at
+        `function_timeout_s`, so a timeout-killed invocation can never be
+        billed past it — the billable window is clamped to the kill."""
         if self.crashed:
-            return self.cold_start_s + self.compute_s
+            return min(self.cold_start_s + self.compute_s,
+                       self.function_timeout_s)
         return self.finish_time - self.start_time
+
+
+# failure taxonomy used by InvocationPlan.failure
+FAIL_CRASH = "crash"        # client never responds (paper's failure straggler)
+FAIL_PLATFORM = "platform"  # transient invocation error (1 − SLO) — retryable
+FAIL_TIMEOUT = "timeout"    # killed at function_timeout_s
+
+
+@dataclass
+class InvocationPlan:
+    """Sampled timing of one invocation attempt, before it 'happens'.
+
+    The event engine consumes this: a plan with `failure is None` yields
+    CLIENT_FINISH at `finish_time` (+ a WARM_EXPIRY lease), a retryable
+    failure yields PLATFORM_FAILURE at `fail_time`, and a crash yields no
+    event at all — the client is only discovered dead at the round
+    deadline, exactly like a real non-responding function.
+    """
+    client_id: str
+    start_time: float
+    cold_start_s: float
+    compute_s: float
+    jitter_s: float
+    cold: bool
+    speed_factor: float
+    failure: Optional[str]           # None | FAIL_CRASH/PLATFORM/TIMEOUT
+    function_timeout_s: float
+    warm_until: float                # 0.0 when the attempt failed
+
+    @property
+    def finish_time(self) -> float:
+        if self.failure is not None:
+            return float("inf")
+        return (self.start_time + self.cold_start_s + self.compute_s
+                + self.jitter_s)
+
+    @property
+    def fail_time(self) -> float:
+        """Virtual time the failure becomes observable to the invoker.
+
+        A platform error surfaces when the (doomed) invocation returns; a
+        timeout kill at exactly `function_timeout_s`; a crashed client
+        never reports (inf — the round deadline discovers it).
+        """
+        if self.failure == FAIL_PLATFORM:
+            return (self.start_time + self.cold_start_s + self.compute_s
+                    + self.jitter_s)
+        if self.failure == FAIL_TIMEOUT:
+            return self.start_time + self.function_timeout_s
+        return float("inf")
+
+    def to_outcome(self) -> InvocationOutcome:
+        return InvocationOutcome(
+            client_id=self.client_id, start_time=self.start_time,
+            cold_start_s=self.cold_start_s,
+            compute_s=0.0 if self.failure == FAIL_CRASH else self.compute_s,
+            crashed=self.failure is not None,
+            finish_time=self.finish_time, cold=self.cold,
+            function_timeout_s=self.function_timeout_s)
 
 
 @dataclass
@@ -67,10 +135,13 @@ class ClientProfile:
     """Per-client behaviour injected by the experiment scenario.
 
     `slow_factor` > 1 models resource heterogeneity (weak VM / big data);
-    `crash` models the paper's failure-type stragglers (never respond).
+    `crash` models the paper's failure-type stragglers (never respond);
+    `fail_attempts` injects N deterministic transient platform failures
+    before the first successful attempt (exercises the retry path).
     """
     slow_factor: float = 1.0
     crash: bool = False
+    fail_attempts: int = 0
 
 
 class VirtualClock:
@@ -85,9 +156,11 @@ class SimulatedFaaSPlatform:
     """One deployment target for client functions (e.g. 'GCF gen2')."""
 
     def __init__(self, config: FaaSConfig = FaaSConfig(),
-                 shape: FunctionShape = FunctionShape(), seed: int = 0):
+                 shape: FunctionShape = FunctionShape(), seed: int = 0,
+                 name: str = "sim"):
         self.config = config
         self.shape = shape
+        self.name = name
         self.rng = np.random.default_rng(seed)
         self._warm: Dict[str, WarmInstance] = {}
         self.clock = VirtualClock()
@@ -112,14 +185,16 @@ class SimulatedFaaSPlatform:
         return speed, self._cold_start_latency(), True
 
     # ------------------------------------------------------------------
-    def invoke(self, client_id: str, nominal_work_s: float,
-               start_time: float,
-               profile: Optional[ClientProfile] = None) -> InvocationOutcome:
-        """Simulate one client-function invocation starting at `start_time`.
+    def plan_invocation(self, client_id: str, nominal_work_s: float,
+                        start_time: float,
+                        profile: Optional[ClientProfile] = None,
+                        attempt: int = 0) -> InvocationPlan:
+        """Sample one invocation attempt starting at `start_time`.
 
         `nominal_work_s` is the client's ideal training time (data size ×
         epochs × per-sample cost); the platform scales it by the landed
         instance's speed factor and the client's heterogeneity profile.
+        `attempt` counts retries of the same logical invocation.
         """
         profile = profile or ClientProfile()
         self.invocations += 1
@@ -129,20 +204,56 @@ class SimulatedFaaSPlatform:
         jitter = float(abs(self.rng.normal(0.0, self.config.network_jitter_s)))
         total = cold_s + compute + jitter
 
-        failed = (profile.crash
-                  or self.rng.random() < self.config.failure_rate
-                  or total > self.config.function_timeout_s)
+        if profile.crash:
+            failure: Optional[str] = FAIL_CRASH
+        else:
+            transient = (attempt < profile.fail_attempts
+                         or self.rng.random() < self.config.failure_rate)
+            if transient:
+                failure = FAIL_PLATFORM
+            elif total > self.config.function_timeout_s:
+                failure = FAIL_TIMEOUT
+            else:
+                failure = None
 
-        finish = float("inf") if failed else start_time + total
-        if not failed:
-            # keep/refresh the warm instance
-            self._warm[client_id] = WarmInstance(
-                speed_factor=speed,
-                warm_until=finish + self.config.warm_idle_timeout_s)
+        warm_until = 0.0
+        if failure is None:
+            # keep/refresh the warm instance lease
+            finish = start_time + total
+            warm_until = finish + self.config.warm_idle_timeout_s
+            self._warm[client_id] = WarmInstance(speed_factor=speed,
+                                                warm_until=warm_until)
         else:
             self._warm.pop(client_id, None)
 
-        return InvocationOutcome(
+        return InvocationPlan(
             client_id=client_id, start_time=start_time, cold_start_s=cold_s,
-            compute_s=compute if not profile.crash else 0.0,
-            crashed=failed, finish_time=finish, cold=was_cold)
+            compute_s=compute, jitter_s=jitter, cold=was_cold,
+            speed_factor=speed, failure=failure,
+            function_timeout_s=self.config.function_timeout_s,
+            warm_until=warm_until)
+
+    def expire_warm(self, client_id: str, now: float) -> bool:
+        """Event-driven scale-to-zero: evict iff the lease truly lapsed.
+
+        A WARM_EXPIRY event scheduled for an old lease is stale once the
+        instance was re-leased by a later invocation — the lease-time
+        check makes stale events harmless no-ops.
+        """
+        inst = self._warm.get(client_id)
+        if inst is not None and inst.warm_until <= now:
+            del self._warm[client_id]
+            return True
+        return False
+
+    def warm_instance_count(self) -> int:
+        return len(self._warm)
+
+    # ------------------------------------------------------------------
+    def invoke(self, client_id: str, nominal_work_s: float,
+               start_time: float,
+               profile: Optional[ClientProfile] = None) -> InvocationOutcome:
+        """One-shot convenience path: plan the attempt and collapse it to
+        its outcome (the pre-event-engine API, kept for direct tests)."""
+        return self.plan_invocation(client_id, nominal_work_s, start_time,
+                                    profile).to_outcome()

@@ -12,6 +12,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 from ..core.aggregation import ClientUpdate
 from .cost import FunctionShape, PriceBook
+from .fleet import PlatformFleet, RoutingPolicy
 from .invoker import ClientWorkFn, InvocationResult
 from .platform import ClientProfile, FaaSConfig, SimulatedFaaSPlatform
 
@@ -48,36 +49,38 @@ PLATFORM_PROFILES: Dict[str, dict] = {
 
 def make_platform(profile: str, seed: int = 0) -> SimulatedFaaSPlatform:
     p = PLATFORM_PROFILES[profile]
-    return SimulatedFaaSPlatform(p["faas"], p["shape"], seed=seed)
+    return SimulatedFaaSPlatform(p["faas"], p["shape"], seed=seed,
+                                 name=profile)
 
 
 class MultiPlatformInvoker:
     """Routes each client to its provider's simulated platform.
 
-    `assignment` maps client_id → profile name; unassigned clients use
-    `default`.  Presents the same interface as MockInvoker so the
-    controller doesn't change (the paper's provider-agnostic design).
+    A thin invoker facade over `fleet.PlatformFleet`: `assignment` maps
+    client_id → profile name; unassigned clients use `default` (or the
+    fleet routing mode).  Presents the same interface as MockInvoker so
+    the controller doesn't change (the paper's provider-agnostic design).
     """
 
     def __init__(self, work_fn: ClientWorkFn,
                  assignment: Dict[str, str],
                  profiles: Optional[Dict[str, ClientProfile]] = None,
-                 default: str = "gcf-gen2", seed: int = 0):
+                 default: str = "gcf-gen2", seed: int = 0,
+                 routing_mode: str = "sticky"):
         self.work_fn = work_fn
-        self.assignment = assignment
         self.profiles = profiles or {}
         self.default = default
-        self.platforms: Dict[str, SimulatedFaaSPlatform] = {
-            name: make_platform(name, seed=seed + i)
-            for i, name in enumerate(PLATFORM_PROFILES)}
-        # controller reads .platform.clock — share one virtual clock
-        shared_clock = self.platforms[default].clock
-        for p in self.platforms.values():
-            p.clock = shared_clock
+        self.fleet = PlatformFleet.from_profiles(
+            routing=RoutingPolicy(list(PLATFORM_PROFILES),
+                                  assignment=assignment, default=default,
+                                  mode=routing_mode, seed=seed),
+            seed=seed)
+        self.platforms = self.fleet.platforms
+        self.assignment = self.fleet.routing.assignment
         self.platform = self.platforms[default]
 
     def platform_of(self, cid: str) -> SimulatedFaaSPlatform:
-        return self.platforms[self.assignment.get(cid, self.default)]
+        return self.fleet.platform_of(cid)
 
     def invoke_clients(self, client_ids: Sequence[str],
                        global_params: Pytree, round_number: int,

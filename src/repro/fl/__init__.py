@@ -1,10 +1,12 @@
 from .client import ClientPool, ClientState
 from .controller import Controller, ExperimentResult, RoundStats
+from .executor import VectorizedExecutor
 from .metrics import (bias, effective_update_ratio, invocation_distribution,
                       weighted_accuracy)
 from .tasks import ClassificationTask, TaskConfig
 
 __all__ = ["ClientPool", "ClientState", "Controller", "ExperimentResult",
-           "RoundStats", "bias", "effective_update_ratio",
+           "RoundStats", "VectorizedExecutor",
+           "bias", "effective_update_ratio",
            "invocation_distribution", "weighted_accuracy",
            "ClassificationTask", "TaskConfig"]

@@ -37,6 +37,7 @@ class ClientPool:
         }
         self.proximal_mu = proximal_mu
         self.seed = seed
+        self._executor = None
 
     @property
     def client_ids(self):
@@ -44,6 +45,12 @@ class ClientPool:
 
     def num_samples(self, cid: str) -> int:
         return len(self.clients[cid].dataset)
+
+    def client_seed(self, cid: str, round_number: int) -> int:
+        """Per-(client, round) training seed — the single source of truth
+        shared by the eager loop and the vectorized executor, so both
+        replay identical batch permutations."""
+        return hash((cid, round_number, self.seed)) % (2 ** 31)
 
     # ------------------------------------------------------------------
     def work_fn(self, cid: str, global_params: Pytree,
@@ -53,8 +60,24 @@ class ClientPool:
         state = self.clients[cid]
         params, _loss = self.task.local_train(
             global_params, state.dataset, mu=self.proximal_mu,
-            seed=hash((cid, round_number, self.seed)) % (2 ** 31))
+            seed=self.client_seed(cid, round_number))
         update = ClientUpdate(
             client_id=cid, params=params, num_samples=len(state.dataset),
             round_number=round_number)
         return update, self.task.nominal_work_seconds(state.dataset)
+
+    # ------------------------------------------------------------------
+    def batch_work_fn(self, cids, global_params: Pytree,
+                      round_number: int) -> Dict[str, tuple]:
+        """Vectorized Client_Update: same contract as `work_fn` but for a
+        whole round's cohort in one vmapped dispatch (fl/executor.py)."""
+        if self._executor is None:
+            from .executor import VectorizedExecutor
+            # cache on the task: its jit cache then survives across pools
+            # (one experiment grid shares one task ⇒ compile once)
+            self._executor = getattr(self.task, "_vec_executor", None)
+            if self._executor is None:
+                self._executor = VectorizedExecutor(self.task)
+                self.task._vec_executor = self._executor
+        return self._executor.run_clients(self, cids, global_params,
+                                          round_number)

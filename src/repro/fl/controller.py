@@ -1,10 +1,19 @@
 """FedLess controller — paper Algorithm 1, Train_Global_Model.
 
 The controller is a lightweight process (the paper removed the K8s/OW
-dependency, §IV-A): per round it asks the Strategy Manager for a client
-subset, invokes them through the (mock) invoker, waits until the round
-deadline on the virtual clock, updates the behavioural history, runs the
-strategy's aggregation, and meters time + cost.
+dependency, §IV-A).  It is now an *event consumer*: per round it asks the
+Strategy Manager for a client subset, hands it to the event-driven
+`InvocationEngine`, and drains the shared event queue until the round
+closes — at the round deadline, at the SAFA quorum's k-th success, or at
+the last in-time finish.  Because the queue persists across rounds, a
+straggler's CLIENT_FINISH from round *t* fires during round *t+1* (or
+later) at its true virtual arrival time, and semi-async strategies
+receive it through `Strategy.on_client_finish` exactly then — genuine
+overlapping rounds instead of the old "cache at round close"
+approximation.
+
+`run_round`/`run` keep their original signatures as thin adapters, so
+experiments, benchmarks and examples run unmodified on the new engine.
 """
 from __future__ import annotations
 
@@ -16,7 +25,8 @@ import numpy as np
 from ..core.history import ClientHistoryDB
 from ..core.strategies import Strategy
 from ..faas.cost import CostMeter
-from ..faas.invoker import MockInvoker
+from ..faas.events import EventKind, EventQueue
+from ..faas.invoker import ClientCompletion, InvocationEngine, MockInvoker
 from .client import ClientPool
 from .metrics import bias, effective_update_ratio, weighted_accuracy
 
@@ -35,6 +45,9 @@ class RoundStats:
     cost: float
     accuracy: Optional[float] = None
     aggregated_updates: int = 0
+    retries: int = 0
+    # updates from earlier rounds that physically arrived during this round
+    straggler_arrivals: List[str] = field(default_factory=list)
 
 
 @dataclass
@@ -74,7 +87,9 @@ class Controller:
                  cost_meter: Optional[CostMeter] = None,
                  round_timeout_s: float = 120.0,
                  eval_every: int = 5, eval_fraction: float = 0.2,
-                 seed: int = 0):
+                 seed: int = 0, max_retries: int = 1,
+                 max_concurrency: Optional[int] = None,
+                 vectorized: bool = False):
         self.strategy = strategy
         self.invoker = invoker
         self.pool = pool
@@ -84,7 +99,13 @@ class Controller:
         self.eval_every = eval_every
         self.eval_fraction = eval_fraction
         self.rng = np.random.default_rng(seed)
+        self.vectorized = vectorized
         self.platform = invoker.platform
+        # one event queue on the platform's clock, shared across rounds —
+        # straggler events survive round boundaries
+        self.queue = EventQueue(self.platform.clock)
+        self.engine = InvocationEngine(invoker, max_retries=max_retries,
+                                       max_concurrency=max_concurrency)
 
     # ------------------------------------------------------------------
     def _evaluate(self, params: Pytree) -> float:
@@ -104,91 +125,164 @@ class Controller:
         return weighted_accuracy(per_client)
 
     # ------------------------------------------------------------------
+    def _precompute_updates(self, selected: List[str], global_params: Pytree,
+                            round_number: int) -> Optional[Dict[str, tuple]]:
+        """Vectorized client execution: run every live selected client's
+        local epochs as one vmapped dispatch (fl/executor.py) and feed the
+        results to the engine as the per-client work cache."""
+        if not (self.vectorized and hasattr(self.pool, "batch_work_fn")):
+            return None
+        # under a concurrency cap only the first `cap` clients fire at
+        # round start — precompute just those; cap-released clients fall
+        # back to the per-client work_fn when their slot opens
+        cap = self.engine.max_concurrency or len(selected)
+        profiles = getattr(self.invoker, "profiles", {})
+        alive = [cid for cid in selected[:cap]
+                 if not getattr(profiles.get(cid), "crash", False)]
+        if not alive:
+            return None
+        return self.pool.batch_work_fn(alive, global_params, round_number)
+
+    def _handle_straggler(self, completion: ClientCompletion,
+                          arrival_time: float, current_round: int) -> None:
+        """A client from an earlier round finished mid-flight: record its
+        (client-side) report now and hand the update to the strategy at
+        its true virtual arrival time (Alg. 1 lines 16-27)."""
+        out = completion.outcome
+        self.history.client_report(out.client_id, completion.round_number,
+                                   out.duration_s)
+        self.strategy.on_client_finish(
+            completion.update, arrival_time=arrival_time,
+            producing_round=completion.round_number,
+            current_round=current_round)
+
+    def _bill_attempts(self, completion: ClientCompletion) -> float:
+        """Every attempt of a retried invocation is billed (FedLess retries
+        are real invocations on the provider's meter)."""
+        return sum(self.cost.charge(fa.duration_s)
+                   for fa in completion.failed_attempts)
+
+    # ------------------------------------------------------------------
     def run_round(self, global_params: Pytree,
                   round_number: int) -> tuple:
         """One Train_Global_Model iteration. Returns (params, RoundStats)."""
-        clock = self.platform.clock
+        clock = self.queue.clock
         t0 = clock.now
         deadline = t0 + self.round_timeout_s
 
         selected = self.strategy.select(self.pool.client_ids, round_number)
-        results = self.invoker.invoke_clients(
-            selected, global_params, round_number, t0)
+        precomputed = self._precompute_updates(selected, global_params,
+                                               round_number)
+        self.engine.open_round(self.queue, selected, global_params,
+                               round_number, t0, precomputed=precomputed)
+        deadline_ev = self.queue.schedule(deadline, EventKind.ROUND_DEADLINE,
+                                          round_number=round_number)
 
         # SAFA-style dynamic quorum: the round closes at the k-th fastest
         # response instead of a fixed timeout (still capped by it).
         quorum = getattr(self.strategy, "quorum", None)
-        if quorum:
-            finishes = sorted(r.outcome.finish_time for r in results
-                              if not r.outcome.crashed)
-            if finishes:
-                kth = finishes[min(quorum, len(finishes)) - 1]
-                deadline = min(deadline, kth)
 
-        successes, late, crashed = [], [], []
+        successes: List[ClientCompletion] = []
+        failed: List[ClientCompletion] = []
+        straggler_arrivals: List[str] = []
         round_cost = 0.0
-        for res in results:
-            out = res.outcome
-            if not out.crashed and out.finish_time <= deadline:
-                successes.append(res)
-            elif not out.crashed:
-                late.append(res)
+        retries = 0
+        close_time = deadline
+
+        while True:
+            ev = self.queue.pop()
+            if ev is None:
+                break
+            if ev.kind is EventKind.ROUND_DEADLINE:
+                if ev.round_number == round_number:
+                    break
+                continue
+            completion = self.engine.handle(self.queue, ev)
+            if completion is None:
+                continue
+            if completion.round_number != round_number:
+                # a straggler from an earlier round arriving mid-flight
+                round_cost += self._bill_attempts(completion)
+                if completion.success:
+                    straggler_arrivals.append(completion.client_id)
+                    self._handle_straggler(completion, ev.time, round_number)
+                continue
+            round_cost += self._bill_attempts(completion)
+            retries += completion.attempts - 1
+            if completion.success:
+                successes.append(completion)
+                self.strategy.on_client_finish(
+                    completion.update, arrival_time=ev.time,
+                    producing_round=round_number,
+                    current_round=round_number)
+                if quorum and len(successes) >= quorum:
+                    close_time = ev.time
+                    deadline_ev.cancel()
+                    break
+                if not failed and len(successes) == len(selected):
+                    # everyone answered in time: close at the last finish
+                    close_time = ev.time
+                    deadline_ev.cancel()
+                    break
             else:
-                crashed.append(res)
+                failed.append(completion)
+            if (quorum
+                    and self.engine.unresolved_count(round_number) == 0):
+                # quorum unreachable — every remaining client resolved
+                # observably, so the k-th response will never come; close
+                # at the last terminal event instead of the full timeout
+                close_time = ev.time
+                deadline_ev.cancel()
+                break
 
-        # Round duration: slowest in-time client, or the deadline if anyone
-        # missed (synchronous server waits until the deadline, §VI-C; with
-        # a SAFA quorum the deadline is the k-th fastest response).
-        if late or crashed:
-            duration = deadline - t0
-        elif successes:
-            duration = max(r.outcome.finish_time for r in successes) - t0
-        else:
-            duration = deadline - t0
+        late_ids, dead_ids, unstarted = self.engine.close_round(round_number,
+                                                                close_time)
+        duration = close_time - t0
+        clock.advance_to(close_time)
 
-        # --- controller-side history updates (Alg. 1 lines 5-13) -------
-        for res in successes:
-            cid = res.outcome.client_id
-            self.history.mark_success(cid, round_number)
+        # --- controller-side history + billing (Alg. 1 lines 5-13) -----
+        for comp in successes:
+            out = comp.outcome
+            self.history.mark_success(out.client_id, round_number)
             # client-side report (Alg. 1 lines 16-27) — in-time client
-            self.history.client_report(cid, round_number,
-                                       res.outcome.duration_s)
-            round_cost += self.cost.charge(res.outcome.duration_s)
-        for res in late:
-            cid = res.outcome.client_id
-            self.history.mark_miss(cid, round_number)
-            # the late client eventually finishes: corrects its missed
-            # round + reports its time (client-side), and its update is
-            # cached for the next aggregation when semi-async.
-            self.history.client_report(cid, round_number,
-                                       res.outcome.duration_s)
-            if self.strategy.semi_async and res.update is not None:
-                self.strategy.accept_late_update(
-                    res.update, arrival_time=res.outcome.finish_time)
-            round_cost += self.cost.charge_straggler(duration)
-        for res in crashed:
-            cid = res.outcome.client_id
+            self.history.client_report(out.client_id, round_number,
+                                       out.duration_s)
+            round_cost += self.cost.charge(out.duration_s)
+        for cid in late_ids:
+            # alive but past the deadline: a miss now; its report and its
+            # update arrive with its CLIENT_FINISH event in a later round
             self.history.mark_miss(cid, round_number)
             round_cost += self.cost.charge_straggler(duration)
+        for comp in failed:
+            self.history.mark_miss(comp.outcome.client_id, round_number)
+            round_cost += self.cost.charge_straggler(duration)
+        for cid in dead_ids:
+            self.history.mark_miss(cid, round_number)
+            round_cost += self.cost.charge_straggler(duration)
+        for cid in unstarted:
+            # never invoked (concurrency cap): a miss, but nothing billed
+            self.history.mark_miss(cid, round_number)
 
-        # --- aggregation runs at the round deadline (virtual now) -------
-        updates = [r.update for r in successes if r.update is not None]
+        # --- aggregation runs at round close (virtual now) --------------
+        self.strategy.on_round_close(round_number, now=close_time)
+        updates = [c.update for c in successes if c.update is not None]
         new_params = self.strategy.aggregate(updates, round_number,
-                                             now=t0 + duration)
+                                             now=close_time)
         if new_params is None:
             new_params = global_params
 
-        clock.advance_to(t0 + duration)
-
+        crashed_ids = ([c.outcome.client_id for c in failed]
+                       + dead_ids + unstarted)
         stats = RoundStats(
             round_number=round_number, selected=list(selected),
-            successes=[r.outcome.client_id for r in successes],
-            late=[r.outcome.client_id for r in late],
-            crashed=[r.outcome.client_id for r in crashed],
+            successes=[c.outcome.client_id for c in successes],
+            late=late_ids, crashed=crashed_ids,
             duration_s=float(duration),
             eur=effective_update_ratio(len(successes), len(selected)),
             cost=round_cost,
-            aggregated_updates=len(updates) + len(self.strategy.update_store))
+            aggregated_updates=self.strategy.last_aggregate_count,
+            retries=retries,
+            straggler_arrivals=straggler_arrivals)
         return new_params, stats
 
     # ------------------------------------------------------------------

@@ -1,21 +1,25 @@
 """jit'd public wrappers around the Pallas kernels.
 
-On this CPU container the kernels run with interpret=True (the kernel body
-executes in Python, validating logic + BlockSpec tiling); on a real TPU
-set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False) to lower to Mosaic.
+Interpret mode is backend-aware by default: on CPU the kernels run with
+interpret=True (the kernel body executes via the interpreter, validating
+logic + BlockSpec tiling); on TPU they lower to Mosaic.  Override either
+way with REPRO_PALLAS_INTERPRET=0/1 or the per-call `interpret` arg.
 """
 from __future__ import annotations
 
 import os
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from .fed_agg import fed_agg as _fed_agg
 from .flash_attention import flash_attention as _flash_attention
 from .ssd_scan import ssd_scan as _ssd_scan
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+_ENV = os.environ.get("REPRO_PALLAS_INTERPRET")
+INTERPRET = (jax.default_backend() == "cpu" if _ENV is None
+             else _ENV != "0")
 
 
 def fed_agg(updates: jnp.ndarray, coeffs: jnp.ndarray,

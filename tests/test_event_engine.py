@@ -1,0 +1,339 @@
+"""Tests for the discrete-event simulation engine.
+
+Covers: event-queue determinism, event-driven warm expiry, retry-path
+billing, concurrency caps, timeout billing clamp, vmapped-executor parity
+with the per-client loop, and the acceptance scenario — a straggler's
+update from round t arriving and aggregating at its true virtual arrival
+time during round t+1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ClientHistoryDB, ClientUpdate, StrategyConfig,
+                        make_strategy)
+from repro.faas import (ClientProfile, CostMeter, EventKind, EventQueue,
+                        FaaSConfig, InvocationEngine, MockInvoker,
+                        PlatformFleet, RoutingPolicy, SimulatedFaaSPlatform,
+                        VirtualClock)
+from repro.fl.controller import Controller
+
+
+# ---------------------------------------------------------------- helpers
+def _platform(**kw):
+    defaults = dict(cold_start_median_s=2.0, cold_start_sigma=0.0,
+                    perf_variation=(1.0, 1.0), failure_rate=0.0,
+                    network_jitter_s=0.0)
+    defaults.update(kw)
+    return SimulatedFaaSPlatform(FaaSConfig(**defaults), seed=0)
+
+
+def _work_fn(cid, params, rnd):
+    return ClientUpdate(cid, {"w": jnp.full((4,), 1.0)}, 10, rnd), 10.0
+
+
+class _StubPool:
+    """Minimal ClientPool stand-in: ids only, no real training."""
+
+    def __init__(self, client_ids):
+        self._ids = list(client_ids)
+        self.clients = {}
+
+    @property
+    def client_ids(self):
+        return self._ids
+
+
+def _controller(client_ids, strategy_name="fedlesscan", profiles=None,
+                round_timeout_s=30.0, platform=None, **ctl_kw):
+    history = ClientHistoryDB()
+    history.ensure(client_ids)
+    strategy = make_strategy(
+        strategy_name,
+        StrategyConfig(clients_per_round=len(client_ids), max_rounds=10),
+        history, seed=0)
+    platform = platform or _platform()
+    invoker = MockInvoker(platform, _work_fn, profiles or {})
+    return Controller(strategy, invoker, _StubPool(client_ids), history,
+                      CostMeter(), round_timeout_s=round_timeout_s,
+                      eval_every=0, **ctl_kw)
+
+
+# ---------------------------------------------------------------- queue
+def test_event_queue_orders_by_time_then_seq():
+    q = EventQueue(VirtualClock())
+    e3 = q.schedule(3.0, EventKind.CLIENT_FINISH, client_id="c")
+    e1a = q.schedule(1.0, EventKind.INVOKE_START, client_id="a")
+    e1b = q.schedule(1.0, EventKind.INVOKE_START, client_id="b")
+    assert [q.pop() for _ in range(3)] == [e1a, e1b, e3]
+    assert q.clock.now == 3.0
+    assert q.pop() is None
+
+
+def test_event_queue_cancel_skips_and_preserves_len():
+    q = EventQueue(VirtualClock())
+    keep = q.schedule(2.0, EventKind.ROUND_DEADLINE)
+    drop = q.schedule(1.0, EventKind.CLIENT_FINISH, client_id="x")
+    drop.cancel()
+    assert len(q) == 1
+    assert q.pop() is keep
+    # cancelled event never advanced the clock
+    assert q.clock.now == 2.0
+
+
+# ---------------------------------------------------------------- warm pool
+def test_warm_expiry_is_event_driven():
+    p = _platform(warm_idle_timeout_s=50.0)
+    q = EventQueue(p.clock)
+    engine = InvocationEngine(MockInvoker(p, _work_fn))
+    engine.open_round(q, ["c"], {}, 0, 0.0)
+    finish = None
+    while True:
+        ev = q.pop()
+        if ev is None:
+            break
+        engine.handle(q, ev)
+        if ev.kind is EventKind.CLIENT_FINISH:
+            finish = ev.time
+            assert p.warm_instance_count() == 1
+        if ev.kind is EventKind.WARM_EXPIRY:
+            assert ev.time == pytest.approx(finish + 50.0)
+    assert p.warm_instance_count() == 0          # scaled to zero by event
+
+
+def test_stale_warm_expiry_is_noop_after_rellease():
+    p = _platform(warm_idle_timeout_s=50.0)
+    p.invoke("c", 10.0, 0.0)                     # lease until finish+50
+    first_lease = p._warm["c"].warm_until
+    p.invoke("c", 10.0, 20.0)                    # warm re-invoke, new lease
+    assert not p.expire_warm("c", first_lease)   # stale event: no-op
+    assert p.warm_instance_count() == 1
+
+
+# ---------------------------------------------------------------- billing
+def test_timeout_kill_bills_at_most_the_timeout():
+    p = _platform(function_timeout_s=50.0)
+    out = p.invoke("c", 500.0, 0.0)
+    assert out.crashed
+    assert out.duration_s == pytest.approx(50.0)
+
+
+def test_retry_bills_both_attempts():
+    profiles = {"c": ClientProfile(fail_attempts=1)}
+    ctl = _controller(["c"], profiles=profiles, round_timeout_s=100.0,
+                      max_retries=1)
+    _, stats = ctl.run_round({"w": jnp.zeros(4)}, 0)
+    # first attempt failed (billed), retry succeeded (billed)
+    assert stats.successes == ["c"]
+    assert stats.retries == 1
+    assert ctl.cost.invocations == 2
+    # the retried round costs more than a clean single-attempt round
+    clean = _controller(["c"], round_timeout_s=100.0)
+    _, clean_stats = clean.run_round({"w": jnp.zeros(4)}, 0)
+    assert stats.cost > clean_stats.cost
+
+
+def test_retries_are_bounded():
+    profiles = {"c": ClientProfile(fail_attempts=10)}
+    ctl = _controller(["c"], profiles=profiles, round_timeout_s=500.0,
+                      max_retries=2)
+    _, stats = ctl.run_round({"w": jnp.zeros(4)}, 0)
+    assert stats.successes == []
+    assert stats.crashed == ["c"]
+    assert ctl.platform.invocations == 3         # initial + 2 retries
+
+
+def test_quorum_unreachable_closes_at_last_observable_outcome():
+    """SAFA: when every client has resolved observably and the k-th
+    success can never come, the round closes immediately instead of
+    burning the full timeout."""
+    profiles = {"broken": ClientProfile(fail_attempts=99)}
+    ctl = _controller(["a", "b", "broken"], strategy_name="safa",
+                      profiles=profiles, round_timeout_s=500.0,
+                      max_retries=1)
+    _, stats = ctl.run_round({"w": jnp.zeros(4)}, 0)
+    assert sorted(stats.successes) == ["a", "b"]
+    assert stats.crashed == ["broken"]
+    assert stats.duration_s < 100.0              # not the 500 s timeout
+
+
+# ---------------------------------------------------------------- capacity
+def test_concurrency_cap_serialises_invocations():
+    ctl = _controller(["a", "b"], round_timeout_s=200.0, max_concurrency=1)
+    _, stats = ctl.run_round({"w": jnp.zeros(4)}, 0)
+    assert sorted(stats.successes) == ["a", "b"]
+    starts = [ev for ev in ctl.queue.trace
+              if ev.kind is EventKind.INVOKE_START]
+    finishes = [ev for ev in ctl.queue.trace
+                if ev.kind is EventKind.CLIENT_FINISH]
+    # the second invocation fires exactly when the first one finishes
+    assert starts[1].time == pytest.approx(finishes[0].time)
+
+
+# ---------------------------------------------------------------- determinism
+def test_same_seed_runs_are_identical():
+    def run_once():
+        profiles = {"slow": ClientProfile(slow_factor=6.0),
+                    "dead": ClientProfile(crash=True)}
+        ctl = _controller(["a", "b", "slow", "dead"], profiles=profiles,
+                          round_timeout_s=30.0)
+        params = {"w": jnp.zeros(4)}
+        rounds = []
+        for rnd in range(3):
+            params, stats = ctl.run_round(params, rnd)
+            rounds.append(stats)
+        trace = [(ev.time, ev.kind.value, ev.client_id)
+                 for ev in ctl.queue.trace]
+        return rounds, trace
+
+    rounds1, trace1 = run_once()
+    rounds2, trace2 = run_once()
+    assert trace1 == trace2                      # identical event order
+    for s1, s2 in zip(rounds1, rounds2):
+        assert s1.successes == s2.successes
+        assert s1.late == s2.late
+        assert s1.crashed == s2.crashed
+        assert s1.duration_s == pytest.approx(s2.duration_s)
+        assert s1.cost == pytest.approx(s2.cost)
+
+
+# ------------------------------------------------------- overlapping rounds
+def test_straggler_update_arrives_during_next_round():
+    """Acceptance: with jitter/failures off and deterministic cold starts,
+    a slow client selected in round 0 finishes during round 1; its update
+    must arrive at its true virtual arrival time (round 1's event stream)
+    and be aggregated at round 1's close with a staleness-damped weight."""
+    profiles = {"slow": ClientProfile(slow_factor=4.0)}
+    # fast clients: 2 (cold) + 10 = 12 s; slow: 2 + 40 = 42 s
+    ctl = _controller(["a", "b", "slow"], profiles=profiles,
+                      round_timeout_s=30.0)
+    params = {"w": jnp.zeros(4)}
+
+    params, r0 = ctl.run_round(params, 0)
+    assert sorted(r0.successes) == ["a", "b"]
+    assert r0.late == ["slow"]
+    assert r0.aggregated_updates == 2
+    assert len(ctl.strategy.update_store) == 0   # nothing cached yet!
+
+    params, r1 = ctl.run_round(params, 1)
+    # the update physically arrived mid-round-1 …
+    assert r1.straggler_arrivals == ["slow"]
+    arrival = next(ev for ev in ctl.queue.trace
+                   if ev.kind is EventKind.CLIENT_FINISH
+                   and ev.client_id == "slow")
+    assert 30.0 < arrival.time < 30.0 + r1.duration_s
+    # … and was merged into round 1's aggregation (successes + straggler)
+    assert r1.aggregated_updates == len(r1.successes) + 1
+    assert len(ctl.strategy.update_store) == 0
+
+
+def test_straggler_beyond_next_round_stays_in_flight():
+    """A very slow client's finish lands after round 1 closes: round 1
+    must NOT aggregate it (in-flight), a later round does (or τ drops it)."""
+    profiles = {"slow": ClientProfile(slow_factor=10.0)}   # 2+100 = 102 s
+    ctl = _controller(["a", "b", "slow"], profiles=profiles,
+                      round_timeout_s=30.0)
+    params = {"w": jnp.zeros(4)}
+    params, r0 = ctl.run_round(params, 0)
+    assert r0.late == ["slow"]
+    params, r1 = ctl.run_round(params, 1)
+    assert r1.straggler_arrivals == []
+    assert r1.aggregated_updates == len(r1.successes)
+    # rounds 0+1 span ≤ 60s; the slow finish (≈102 s) arrives later
+    params, r2 = ctl.run_round(params, 2)
+    params, r3 = ctl.run_round(params, 3)
+    arrivals = r2.straggler_arrivals + r3.straggler_arrivals
+    assert arrivals == ["slow"]
+
+
+# ---------------------------------------------------------------- executor
+def test_vectorized_executor_matches_per_client_loop():
+    from repro.data import make_image_classification
+    from repro.data.synthetic import ArrayDataset
+    from repro.fl.client import ClientPool
+    from repro.fl.tasks import ClassificationTask, TaskConfig
+    from repro.models.small import make_cnn
+
+    full = make_image_classification(130, image_size=14, n_classes=3, seed=0)
+    # unequal shard sizes: 40/40 share one vmap group, 50 its own;
+    # 40 % 16 != 0 exercises the padded-batch mask path
+    parts = {"c0": ArrayDataset(full.x[:40], full.y[:40]),
+             "c1": ArrayDataset(full.x[40:80], full.y[40:80]),
+             "c2": ArrayDataset(full.x[80:], full.y[80:])}
+    task = ClassificationTask(make_cnn(14, 1, 3, 16),
+                              TaskConfig(epochs=2, batch_size=16))
+    pool = ClientPool(task, parts, proximal_mu=0.001, seed=3)
+    params = task.init_params(0)
+
+    vec = pool.batch_work_fn(list(parts), params, round_number=1)
+    for cid in parts:
+        ref_update, ref_nominal = pool.work_fn(cid, params, 1)
+        vec_update, vec_nominal = vec[cid]
+        assert vec_nominal == pytest.approx(ref_nominal)
+        assert vec_update.num_samples == ref_update.num_samples
+        ref_leaves = jnp.concatenate(
+            [l.ravel() for l in jax.tree_util.tree_leaves(ref_update.params)])
+        vec_leaves = jnp.concatenate(
+            [l.ravel() for l in jax.tree_util.tree_leaves(vec_update.params)])
+        np.testing.assert_allclose(np.asarray(vec_leaves),
+                                   np.asarray(ref_leaves),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_vectorized_experiment_matches_eager():
+    """End-to-end: the same experiment with vectorized client execution
+    produces the same round outcomes and learning as the eager loop."""
+    from repro.data import label_sorted_shards, make_image_classification
+    from repro.data.synthetic import ArrayDataset
+    from repro.fl.experiment import (ExperimentConfig, ScenarioConfig,
+                                     run_experiment)
+    from repro.fl.tasks import ClassificationTask, TaskConfig
+    from repro.models.small import make_cnn
+
+    full = make_image_classification(700, image_size=14, n_classes=4, seed=0)
+    train = ArrayDataset(full.x[:600], full.y[:600])
+    test = ArrayDataset(full.x[600:], full.y[600:])
+    parts = label_sorted_shards(train, 8, 2, seed=0)
+    test_parts = label_sorted_shards(test, 8, 2, seed=0)
+    task = ClassificationTask(make_cnn(14, 1, 4, 16),
+                              TaskConfig(epochs=1, batch_size=32,
+                                         per_sample_time_s=0.05))
+
+    results = {}
+    for vec in (True, False):
+        cfg = ExperimentConfig(strategy="fedlesscan", n_rounds=3,
+                               clients_per_round=4, eval_every=0, seed=0,
+                               vectorized=vec,
+                               scenario=ScenarioConfig(
+                                   straggler_fraction=0.25,
+                                   round_timeout_s=30.0, seed=0))
+        results[vec] = run_experiment(task, parts, test_parts, cfg)
+    for rv, re_ in zip(results[True].rounds, results[False].rounds):
+        assert rv.successes == re_.successes
+        assert rv.duration_s == pytest.approx(re_.duration_s)
+    assert results[True].final_accuracy == pytest.approx(
+        results[False].final_accuracy, abs=0.05)
+
+
+# ---------------------------------------------------------------- fleet
+def test_fleet_round_robin_routing_is_sticky_and_balanced():
+    fleet = PlatformFleet.from_profiles(
+        routing=RoutingPolicy(["gcf-gen2", "aws-lambda", "openfaas"],
+                              mode="round-robin"))
+    names = [fleet.name_of(f"c{i}") for i in range(6)]
+    assert names == ["gcf-gen2", "aws-lambda", "openfaas"] * 2
+    # sticky: a second lookup routes identically
+    assert fleet.name_of("c0") == "gcf-gen2"
+    clocks = {id(p.clock) for p in fleet.platforms.values()}
+    assert len(clocks) == 1
+
+
+def test_fleet_outage_fails_invocations_and_recovers():
+    fleet = PlatformFleet.from_profiles()
+    fleet.set_platform_down("aws-lambda")
+    p = fleet.platforms["aws-lambda"]
+    out = p.invoke("c", 1.0, 0.0)
+    assert out.crashed
+    fleet.set_platform_down("aws-lambda", down=False)
+    assert p.config.failure_rate < 1.0
