@@ -18,7 +18,12 @@ from repro.models.small import make_cnn
 
 STRATEGIES = ("fedavg", "fedprox", "fedlesscan", "safa")
 RATIOS = (0.0, 0.1, 0.3, 0.5, 0.7)
-CACHE = Path(__file__).resolve().parent.parent / "results" / "bench_grid.json"
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+CACHE = RESULTS / "bench_grid.json"
+# sync vs semi-async vs barrier-free, one straggler ratio (§ async study)
+ASYNC_STRATEGIES = ("fedavg", "fedlesscan", "fedasync", "fedbuff")
+ASYNC_RATIO = 0.3
+ASYNC_CACHE = RESULTS / "async_grid.json"
 
 N_CLIENTS = 24
 N_ROUNDS = 10
@@ -62,7 +67,47 @@ def run_grid(force: bool = False) -> dict:
                 "bias": res.bias,
                 "invocations": sorted(counts.values()),
                 "round_durations": [r.duration_s for r in res.rounds],
+                # cost attribution (CostMeter breakdown)
+                "cost_by_client": {cid: round(c, 9) for cid, c
+                                   in sorted(res.cost_by_client.items())},
+                "cost_by_round": [round(res.cost_by_round.get(i, 0.0), 9)
+                                  for i in range(N_ROUNDS)],
             }
     CACHE.parent.mkdir(parents=True, exist_ok=True)
     CACHE.write_text(json.dumps(grid, indent=1))
+    return grid
+
+
+def run_async_grid(force: bool = False) -> dict:
+    """Training-mode comparison at one straggler ratio: FedAvg (sync),
+    FedLesScan (semi-async), FedAsync/FedBuff (barrier-free), all on the
+    same seed, task and straggler profile, with JSONL traces exported to
+    results/traces/."""
+    if ASYNC_CACHE.exists() and not force:
+        return json.loads(ASYNC_CACHE.read_text())
+    task, parts, test_parts = _setup()
+    grid: dict = {}
+    for strategy in ASYNC_STRATEGIES:
+        trace = RESULTS / "traces" / f"{strategy}@{ASYNC_RATIO}.jsonl"
+        cfg = ExperimentConfig(
+            strategy=strategy, n_rounds=N_ROUNDS,
+            clients_per_round=CLIENTS_PER_ROUND, eval_every=0, seed=0,
+            trace_path=str(trace),
+            scenario=ScenarioConfig(straggler_fraction=ASYNC_RATIO,
+                                    round_timeout_s=30.0, seed=0))
+        res = run_experiment(task, parts, test_parts, cfg)
+        grid[strategy] = {
+            "strategy": strategy, "mode": res.mode, "ratio": ASYNC_RATIO,
+            "accuracy": res.final_accuracy,
+            "eur": res.mean_eur,
+            "duration_s": res.total_duration_s,
+            "cost_usd": res.total_cost,
+            # trailing non-aggregated accounting windows don't count
+            "aggregations": sum(1 for r in res.rounds
+                                if r.aggregated_updates > 0),
+            "updates_delivered": sum(len(r.successes) for r in res.rounds),
+            "trace": str(trace),
+        }
+    ASYNC_CACHE.parent.mkdir(parents=True, exist_ok=True)
+    ASYNC_CACHE.write_text(json.dumps(grid, indent=1))
     return grid

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_table3      — experiment duration per strategy × ratio
   * bench_table4      — cost per strategy × ratio
   * bench_fig3c       — selection-bias distribution per strategy
+  * bench_cost_attr   — per-client cost concentration (CostMeter breakdown)
+  * bench_async       — sync vs semi-async vs FedAsync/FedBuff + traces
   * bench_kernels     — Pallas kernel µs/call vs jnp oracle µs/call
   * bench_roofline    — dry-run roofline terms per (arch × shape) [cached]
 
@@ -21,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.fedless_grid import RATIOS, STRATEGIES, run_grid
+from benchmarks.fedless_grid import (RATIOS, STRATEGIES, run_async_grid,
+                                     run_grid)
 
 RESULTS = Path(__file__).resolve().parent.parent / "results"
 
@@ -89,6 +92,34 @@ def bench_fig3c(grid: dict) -> None:
              f"max={max(inv)}")
 
 
+# ---------------------------------------------------------------- cost attribution
+def bench_cost_attribution(grid: dict) -> None:
+    """Per-client cost concentration at 50% stragglers: stragglers re-billed
+    for whole rounds dominate the bill (CostMeter.by_client breakdown)."""
+    for s in STRATEGIES:
+        g = grid[f"{s}@0.5"]
+        by_client = g.get("cost_by_client")
+        if not by_client:
+            _row(f"cost_attr/{s}_50pct", 0.0, "stale_cache=regen_grid")
+            continue
+        costs = sorted(by_client.values(), reverse=True)
+        top3 = sum(costs[:3])
+        total = sum(costs) or 1.0
+        _row(f"cost_attr/{s}_50pct", 0.0,
+             f"top3_share={top3 / total:.2f};clients_billed={len(costs)}")
+
+
+# ---------------------------------------------------------------- async modes
+def bench_async() -> None:
+    """Training-mode comparison (sync / semi-async / barrier-free) at 30%
+    stragglers, traces exported to results/traces/*.jsonl."""
+    for name, g in run_async_grid().items():
+        _row(f"async/{name}", g["duration_s"] * 1e6,
+             f"mode={g['mode']};acc={g['accuracy']:.3f};eur={g['eur']:.2f};"
+             f"cost_usd={g['cost_usd']:.4f};"
+             f"updates={g['updates_delivered']}")
+
+
 # ---------------------------------------------------------------- kernels
 def bench_kernels() -> None:
     from repro.kernels import fed_agg, flash_attention, ssd_scan
@@ -148,6 +179,8 @@ def main() -> None:
     bench_table3(grid)
     bench_table4(grid)
     bench_fig3c(grid)
+    bench_cost_attribution(grid)
+    bench_async()
     bench_kernels()
     bench_roofline()
     # beyond-paper: component ablations of FedLesScan

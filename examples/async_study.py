@@ -1,0 +1,100 @@
+"""Async study: sync vs semi-async vs barrier-free training modes under
+straggler injection, on identical seeds, task, and straggler profile.
+
+Four strategies ride the same mode-agnostic TrainingDriver:
+
+    fedavg      sync        round barrier, late updates discarded
+    fedlesscan  semi-async  round barrier + staleness-damped late merges
+    fedasync    async       barrier-free, merge-per-arrival (Xie et al.)
+    fedbuff     async       barrier-free, buffer-K merges (Nguyen et al.)
+
+Each run exports its JSONL trace (one record per invocation attempt,
+billing charge, and aggregation event) to results/async_study/, and the
+first async strategy is run twice to demonstrate byte-identical traces —
+virtual-clock determinism survives the barrier-free mode.
+
+    PYTHONPATH=src python examples/async_study.py [--ratio 0.3 --rounds 8]
+"""
+import argparse
+from pathlib import Path
+
+from repro.data import label_sorted_shards, make_image_classification
+from repro.data.synthetic import ArrayDataset
+from repro.fl.experiment import (ExperimentConfig, ScenarioConfig,
+                                 run_experiment)
+from repro.fl.tasks import ClassificationTask, TaskConfig
+from repro.models.small import make_cnn
+
+STRATEGIES = ("fedavg", "fedlesscan", "fedasync", "fedbuff")
+OUT = Path(__file__).resolve().parent.parent / "results" / "async_study"
+
+
+def build_task(n_clients: int, seed: int = 0):
+    full = make_image_classification(1300, image_size=14, n_classes=5,
+                                     seed=seed)
+    train = ArrayDataset(full.x[:1100], full.y[:1100])
+    test = ArrayDataset(full.x[1100:], full.y[1100:])
+    parts = label_sorted_shards(train, n_clients, 2, seed=seed)
+    test_parts = label_sorted_shards(test, n_clients, 2, seed=seed)
+    task = ClassificationTask(
+        make_cnn(14, 1, 5, 32),
+        TaskConfig(epochs=1, batch_size=32, per_sample_time_s=0.05))
+    return task, parts, test_parts
+
+
+def run_one(strategy: str, task, parts, test_parts, args,
+            trace_path: Path):
+    cfg = ExperimentConfig(
+        strategy=strategy, n_rounds=args.rounds,
+        clients_per_round=args.cohort, eval_every=0, seed=args.seed,
+        buffer_k=args.buffer_k, trace_path=str(trace_path),
+        scenario=ScenarioConfig(straggler_fraction=args.ratio,
+                                round_timeout_s=30.0, seed=args.seed))
+    return run_experiment(task, parts, test_parts, cfg)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ratio", type=float, default=0.3)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=24)
+    ap.add_argument("--cohort", type=int, default=6)
+    ap.add_argument("--buffer-k", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-determinism-check", action="store_true")
+    args = ap.parse_args()
+
+    task, parts, test_parts = build_task(args.clients, seed=args.seed)
+    print(f"straggler ratio {int(args.ratio * 100)}%, "
+          f"{args.rounds} rounds x cohort {args.cohort}\n")
+    print(f"{'strategy':12s} {'mode':10s} {'acc':>6s} {'EUR':>5s} "
+          f"{'aggs':>5s} {'time(s)':>8s} {'cost($)':>8s}")
+
+    results = {}
+    for strategy in STRATEGIES:
+        trace = OUT / f"{strategy}.jsonl"
+        res = run_one(strategy, task, parts, test_parts, args, trace)
+        results[strategy] = res
+        print(f"{strategy:12s} {res.mode:10s} {res.final_accuracy:6.3f} "
+              f"{res.mean_eur:5.2f} {len(res.rounds):5d} "
+              f"{res.total_duration_s:8.0f} {res.total_cost:8.4f}")
+
+    semi = results["fedlesscan"].mean_eur
+    for name in ("fedasync", "fedbuff"):
+        ok = results[name].mean_eur >= semi
+        print(f"\n{name} EUR {results[name].mean_eur:.2f} "
+              f"{'>=' if ok else '<'} semi-async EUR {semi:.2f} "
+              f"({'ok' if ok else 'REGRESSION'})")
+
+    if not args.skip_determinism_check:
+        trace = OUT / "fedbuff.jsonl"
+        again = OUT / "fedbuff_rerun.jsonl"
+        run_one("fedbuff", task, parts, test_parts, args, again)
+        identical = trace.read_bytes() == again.read_bytes()
+        print(f"\ndeterminism: rerun trace byte-identical = {identical}")
+        if not identical:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

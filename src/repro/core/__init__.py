@@ -7,8 +7,8 @@ from .clustering import ClusteringResult, calinski_harabasz, cluster_clients, db
 from .features import ema, feature_matrix, missed_round_ema, total_ema, training_ema
 from .history import ClientHistoryDB, ClientRecord
 from .selection import SelectionPlan, select_clients, select_random
-from .strategies import (STRATEGIES, FedAvg, FedLesScan, FedProx, Strategy,
-                         StrategyConfig, make_strategy)
+from .strategies import (STRATEGIES, FedAsync, FedAvg, FedBuff, FedLesScan,
+                         FedProx, Strategy, StrategyConfig, make_strategy)
 
 __all__ = [
     "ClientUpdate", "RunningAggregator", "UpdateStore", "fedavg_aggregate", "fedavg_coefficients",
@@ -16,6 +16,6 @@ __all__ = [
     "calinski_harabasz", "cluster_clients", "dbscan", "ema", "feature_matrix",
     "missed_round_ema", "total_ema", "training_ema", "ClientHistoryDB",
     "ClientRecord", "SelectionPlan", "select_clients", "select_random",
-    "STRATEGIES", "FedAvg", "FedLesScan", "FedProx", "Strategy",
-    "StrategyConfig", "make_strategy",
+    "STRATEGIES", "FedAsync", "FedAvg", "FedBuff", "FedLesScan", "FedProx",
+    "Strategy", "StrategyConfig", "make_strategy",
 ]

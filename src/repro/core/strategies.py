@@ -1,19 +1,29 @@
-"""Training strategies: FedAvg, FedProx, FedLesScan.
+"""Training strategies: FedAvg, FedProx, FedLesScan, SAFA, FedAsync, FedBuff.
 
-A Strategy owns (a) client selection for a round, (b) the aggregation
-scheme, and (c) an optional client-side loss hook (FedProx's proximal
-term).  The controller (fl/controller.py) is strategy-agnostic — this is
-the paper's `Strategy Manager` component (§IV-A).
+A Strategy owns (a) client selection for a round (or the initial cohort
+in barrier-free mode), (b) the aggregation scheme, and (c) an optional
+client-side loss hook (FedProx's proximal term).  The training driver
+(fl/controller.py) is strategy-agnostic — this is the paper's `Strategy
+Manager` component (§IV-A).
+
+`Strategy.on_client_finish` is the single update-delivery path for every
+training mode: the driver calls it whenever a client's update physically
+arrives (at its true virtual time).  Barrier strategies return None and
+aggregate at round close; barrier-free strategies (`barrier_free = True`)
+may return a *new global model* from the hook itself — FedAsync merges
+every arrival immediately with a staleness-damped mixing weight, FedBuff
+flushes a size-K buffer.  Both reuse `core.aggregation.aggregate`, i.e.
+the flattened Pallas `fed_agg` fast path.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, List, Optional, Sequence
+from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .aggregation import (ClientUpdate, UpdateStore, fedavg_aggregate,
-                          staleness_aggregate)
+from .aggregation import (ClientUpdate, UpdateStore, aggregate,
+                          fedavg_aggregate, staleness_aggregate)
 from .history import ClientHistoryDB
 from .selection import SelectionPlan, select_clients, select_random
 
@@ -27,6 +37,13 @@ class StrategyConfig:
     tau: int = 2                  # staleness cutoff (FedLesScan, paper §V-D)
     ema_alpha: float = 0.5
     fedprox_mu: float = 0.001     # proximal coefficient (FedProx)
+    # barrier-free (async) strategies
+    buffer_k: int = 4             # FedBuff aggregation buffer size
+    async_alpha: float = 0.6      # FedAsync base mixing rate
+    server_lr: float = 0.7        # FedBuff server rate: flush = (1-η)·global
+                                  # + η·buffer average (η=1 → pure average)
+    staleness_exponent: float = 0.5   # polynomial staleness damping a:
+                                  # weight ∝ (staleness+1)^(-a)
 
 
 class Strategy:
@@ -35,6 +52,7 @@ class Strategy:
     name = "base"
     uses_history = False          # does selection read behavioural data?
     semi_async = False            # accept late updates into later rounds?
+    barrier_free = False          # merge on arrival (no round barrier)?
 
     def __init__(self, config: StrategyConfig, history: ClientHistoryDB,
                  seed: int = 0):
@@ -52,21 +70,36 @@ class Strategy:
     # ---- event hooks (controller is an event consumer) ------------------
     def on_client_finish(self, update: Optional[ClientUpdate],
                          arrival_time: float, producing_round: int,
-                         current_round: int) -> None:
+                         current_round: int,
+                         global_params: Optional[Pytree] = None
+                         ) -> Optional[Pytree]:
         """A client's update physically arrived at `arrival_time` (virtual).
 
-        Same-round arrivals are collected by the controller and passed to
-        `aggregate` at round close; an arrival from an *earlier* round is a
-        straggler's update landing mid-flight — semi-async strategies cache
-        it at its true arrival time, synchronous ones discard it.
+        This is the single delivery path for every training mode.  In
+        barrier modes, same-round arrivals are collected by the driver and
+        passed to `aggregate` at round close; an arrival from an *earlier*
+        round is a straggler's update landing mid-flight — semi-async
+        strategies cache it at its true arrival time, synchronous ones
+        discard it.  In barrier-free (async) mode the driver additionally
+        passes the current `global_params` and `producing_round`/
+        `current_round` are *model versions*: a barrier-free strategy may
+        return a new global model immediately (FedAsync) or after its
+        buffer fills (FedBuff).  Returning None keeps the current model.
         """
         if (self.semi_async and update is not None
                 and producing_round < current_round):
             self.accept_late_update(update, arrival_time=arrival_time)
+        return None
 
     def on_round_close(self, round_number: int,
                        now: Optional[float] = None) -> None:
         """Called at the round's close time, before aggregation."""
+
+    def finalize(self, global_params: Pytree,
+                 current_round: int) -> Optional[Pytree]:
+        """End of a barrier-free run: flush any partially-buffered state
+        into a last global model (or None to keep the current one)."""
+        return None
 
     def _staleness_merge(self, updates: Sequence[ClientUpdate],
                          round_number: int,
@@ -171,7 +204,102 @@ class SAFA(Strategy):
         return self._staleness_merge(updates, round_number, now)
 
 
-STRATEGIES = {cls.name: cls for cls in (FedAvg, FedProx, FedLesScan, SAFA)}
+def _staleness_weight(staleness: int, exponent: float) -> float:
+    """Polynomial staleness damping (Xie et al., FedAsync): an update
+    trained `staleness` model versions ago gets weight (s+1)^(-a)."""
+    return float(staleness + 1) ** (-exponent)
+
+
+class FedAsync(Strategy):
+    """Xie et al. (arXiv:1903.03934) — fully-asynchronous FL: every
+    arriving update is merged into the global model *immediately*,
+
+        w ← (1 − α_s) · w + α_s · w_k,   α_s = α · (s+1)^(-a)
+
+    where s is the update's staleness in model versions.  Barrier-free:
+    requires the driver's async mode (the flwr-serverless regime,
+    arXiv:2310.15329)."""
+
+    name = "fedasync"
+    barrier_free = True
+
+    def select(self, client_ids, round_number):
+        return select_random(client_ids, self.config.clients_per_round,
+                             self.rng)
+
+    def on_client_finish(self, update, arrival_time, producing_round,
+                         current_round, global_params=None):
+        if update is None or global_params is None:
+            return super().on_client_finish(
+                update, arrival_time, producing_round, current_round)
+        staleness = max(0, current_round - producing_round)
+        alpha = (self.config.async_alpha
+                 * _staleness_weight(staleness, self.config.staleness_exponent))
+        anchor = ClientUpdate("__global__", global_params,
+                              num_samples=0, round_number=current_round)
+        self.last_aggregate_count = 1
+        return aggregate([anchor, update],
+                         np.array([1.0 - alpha, alpha], dtype=np.float64))
+
+
+class FedBuff(Strategy):
+    """Nguyen et al. (arXiv:2106.06639) — buffered asynchronous
+    aggregation: arrivals accumulate in a size-K buffer; when it fills,
+    the new global model is (1−η)·global + η·(staleness- and
+    cardinality-weighted buffer average), computed as one weighted sum
+    over the anchor + K buffered updates through the Pallas `fed_agg`
+    fast path, and the buffer is cleared.  Barrier-free."""
+
+    name = "fedbuff"
+    barrier_free = True
+
+    def __init__(self, config: StrategyConfig, history: ClientHistoryDB,
+                 seed: int = 0):
+        super().__init__(config, history, seed=seed)
+        self._buffer: List[Tuple[int, ClientUpdate]] = []  # (staleness base)
+
+    def select(self, client_ids, round_number):
+        return select_random(client_ids, self.config.clients_per_round,
+                             self.rng)
+
+    def _flush(self, global_params: Pytree,
+               current_round: int) -> Pytree:
+        eta = self.config.server_lr
+        weights = np.array(
+            [u.num_samples * _staleness_weight(
+                max(0, current_round - produced),
+                self.config.staleness_exponent)
+             for produced, u in self._buffer], dtype=np.float64)
+        total = weights.sum() or 1.0
+        coeffs = np.concatenate(([1.0 - eta], eta * weights / total))
+        anchor = ClientUpdate("__global__", global_params,
+                              num_samples=0, round_number=current_round)
+        merged = aggregate([anchor] + [u for _, u in self._buffer], coeffs)
+        self.last_aggregate_count = len(self._buffer)
+        self._buffer.clear()
+        return merged
+
+    def on_client_finish(self, update, arrival_time, producing_round,
+                         current_round, global_params=None):
+        if update is None or global_params is None:
+            return super().on_client_finish(
+                update, arrival_time, producing_round, current_round)
+        self._buffer.append((producing_round, update))
+        if len(self._buffer) < self.config.buffer_k:
+            return None
+        return self._flush(global_params, current_round)
+
+    def finalize(self, global_params, current_round):
+        """Flush the trailing partial buffer so delivered-but-unmerged
+        updates still reach the final global model."""
+        if not self._buffer:
+            return None
+        return self._flush(global_params, current_round)
+
+
+STRATEGIES = {cls.name: cls
+              for cls in (FedAvg, FedProx, FedLesScan, SAFA,
+                          FedAsync, FedBuff)}
 
 
 def make_strategy(name: str, config: StrategyConfig,

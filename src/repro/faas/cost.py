@@ -11,10 +11,17 @@ Gen-2 functions get a vCPU allocation proportional to memory
 (2048 MB → 1 vCPU, the paper's client config).  The paper estimates a
 straggler's cost as running for the *entire round duration* (§VI-C), which
 `straggler_invocation_cost` reproduces.
+
+When `PriceBook.free_tier` is set, the monthly GCF free tier (2M
+invocations, 180k vCPU-seconds, 360k GiB-seconds) is consumed first: a
+`FreeTierAllowance` tracks the remaining grant and `invocation_cost`
+only bills usage beyond it.  The paper reports raw costs (free tier
+off), which stays the default.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Dict, Optional
 
 
 @dataclass(frozen=True)
@@ -25,6 +32,22 @@ class PriceBook:
     free_tier: bool = False  # paper reports raw costs, no free tier
 
 
+@dataclass
+class FreeTierAllowance:
+    """Remaining monthly free-tier grant (GCF gen-2 public quotas)."""
+    invocations: float = 2_000_000.0
+    vcpu_seconds: float = 180_000.0
+    gib_seconds: float = 360_000.0
+
+    def consume(self, attr: str, amount: float) -> float:
+        """Consume up to `amount` from the grant; return the *billable*
+        remainder that exceeded it."""
+        remaining = getattr(self, attr)
+        free = min(amount, remaining)
+        setattr(self, attr, remaining - free)
+        return amount - free
+
+
 @dataclass(frozen=True)
 class FunctionShape:
     memory_mb: int = 2048
@@ -33,42 +56,79 @@ class FunctionShape:
 
 
 def invocation_cost(duration_s: float, shape: FunctionShape,
-                    prices: PriceBook = PriceBook()) -> float:
+                    prices: PriceBook = PriceBook(),
+                    allowance: Optional[FreeTierAllowance] = None) -> float:
     """Cost of one function invocation running for `duration_s` seconds.
 
-    GCF bills duration rounded up to the nearest 100 ms increment.
+    GCF bills duration rounded up to the nearest 100 ms increment.  With
+    `prices.free_tier` and an `allowance`, the free-tier grant is drawn
+    down first and only the excess is billed (the allowance is mutated).
     """
     billed = max(0.1, -(-duration_s // 0.1) * 0.1)  # ceil to 100 ms
     gib = shape.memory_mb / 1024.0
-    return (billed * shape.vcpus * prices.vcpu_second
-            + billed * gib * prices.gib_second
-            + prices.per_invocation)
+    vcpu_s = billed * shape.vcpus
+    gib_s = billed * gib
+    n_inv = 1.0
+    if prices.free_tier and allowance is not None:
+        vcpu_s = allowance.consume("vcpu_seconds", vcpu_s)
+        gib_s = allowance.consume("gib_seconds", gib_s)
+        n_inv = allowance.consume("invocations", n_inv)
+    return (vcpu_s * prices.vcpu_second
+            + gib_s * prices.gib_second
+            + n_inv * prices.per_invocation)
 
 
 def straggler_invocation_cost(round_duration_s: float, shape: FunctionShape,
-                              prices: PriceBook = PriceBook()) -> float:
+                              prices: PriceBook = PriceBook(),
+                              allowance: Optional[FreeTierAllowance] = None
+                              ) -> float:
     """Paper §VI-C: a straggler is charged as if it ran the whole round."""
-    return invocation_cost(round_duration_s, shape, prices)
+    return invocation_cost(round_duration_s, shape, prices, allowance)
 
 
 class CostMeter:
-    """Accumulates experiment cost across invocations (one per client call)."""
+    """Accumulates experiment cost across invocations (one per client call).
+
+    Beyond the total, the meter attributes every charge to the client and
+    round (or async model version) it was incurred for — `by_client` and
+    `rounds` — and, when a `TraceRecorder` is attached, emits one billing
+    record per charge so the JSONL trace reconstructs `total` exactly.
+    """
 
     def __init__(self, shape: FunctionShape = FunctionShape(),
-                 prices: PriceBook = PriceBook()):
+                 prices: PriceBook = PriceBook(), trace=None):
         self.shape = shape
         self.prices = prices
+        self.trace = trace
         self.total = 0.0
         self.invocations = 0
+        self.by_client: Dict[str, float] = {}
+        self.rounds: Dict[int, float] = {}
+        self.allowance = FreeTierAllowance() if prices.free_tier else None
 
-    def charge(self, duration_s: float) -> float:
-        c = invocation_cost(duration_s, self.shape, self.prices)
-        self.total += c
+    def _record(self, cost: float, duration_s: float, kind: str,
+                client_id: Optional[str], round_number) -> float:
+        self.total += cost
         self.invocations += 1
-        return c
+        if client_id is not None:
+            self.by_client[client_id] = self.by_client.get(client_id, 0.0) + cost
+        if round_number is not None:
+            self.rounds[round_number] = self.rounds.get(round_number, 0.0) + cost
+        if self.trace is not None:
+            self.trace.billing(cost=cost, duration_s=duration_s, kind=kind,
+                               client_id=client_id, round_number=round_number)
+        return cost
 
-    def charge_straggler(self, round_duration_s: float) -> float:
-        c = straggler_invocation_cost(round_duration_s, self.shape, self.prices)
-        self.total += c
-        self.invocations += 1
-        return c
+    def charge(self, duration_s: float, client_id: Optional[str] = None,
+               round_number=None, kind: str = "attempt") -> float:
+        c = invocation_cost(duration_s, self.shape, self.prices,
+                            self.allowance)
+        return self._record(c, duration_s, kind, client_id, round_number)
+
+    def charge_straggler(self, round_duration_s: float,
+                         client_id: Optional[str] = None,
+                         round_number=None) -> float:
+        c = straggler_invocation_cost(round_duration_s, self.shape,
+                                      self.prices, self.allowance)
+        return self._record(c, round_duration_s, "straggler", client_id,
+                            round_number)

@@ -67,11 +67,14 @@ class EventQueue:
     on it and it doubles as a simulation log.
     """
 
-    def __init__(self, clock: Optional[VirtualClock] = None):
+    def __init__(self, clock: Optional[VirtualClock] = None, recorder=None):
         self.clock = clock or VirtualClock()
         self._heap: List[tuple] = []
         self._seq = itertools.count()
         self.trace: List[Event] = []
+        # optional TraceRecorder (faas/trace.py): notified of every popped
+        # event for opt-in event-stream export
+        self.recorder = recorder
 
     # ------------------------------------------------------------------
     def schedule(self, time: float, kind: EventKind,
@@ -90,6 +93,8 @@ class EventQueue:
                 continue
             self.clock.advance_to(ev.time)
             self.trace.append(ev)
+            if self.recorder is not None:
+                self.recorder.on_event(ev)
             return ev
         return None
 

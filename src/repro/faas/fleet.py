@@ -68,6 +68,64 @@ class RoutingPolicy:
         return name
 
 
+class TelemetryRoutingPolicy(RoutingPolicy):
+    """Routing that reacts to the fleet's trace telemetry.
+
+    Reads the rolling per-platform failure/cold-start rates that a
+    `TraceRecorder` (faas/trace.py) accumulates from the platforms' plan
+    stream (attach the recorder to the platforms, e.g.
+    `PlatformFleet.attach_recorder`) and scores each provider as
+
+        score = failure_weight · recent_failure_rate
+              + cold_weight · recent_cold_start_rate
+
+    New clients are routed to the lowest-scoring provider (deterministic
+    name tie-break).  Assignments stay sticky — warm pools keep their
+    meaning — *unless* the assigned provider's score crosses
+    `reroute_threshold` (e.g. a regional outage observed as repeated
+    failures), in which case the client is re-routed to the current best
+    provider and a ``route`` record is emitted.  Providers with fewer
+    than `min_samples` recent attempts score 0 (no evidence ≠ bad).
+    """
+
+    def __init__(self, platform_names: Sequence[str], recorder,
+                 assignment: Optional[Dict[str, str]] = None,
+                 default: Optional[str] = None, seed: int = 0,
+                 failure_weight: float = 1.0, cold_weight: float = 0.25,
+                 reroute_threshold: float = 0.5, min_samples: int = 5):
+        super().__init__(platform_names, assignment, default,
+                         mode="sticky", seed=seed)
+        self.recorder = recorder
+        self.failure_weight = failure_weight
+        self.cold_weight = cold_weight
+        self.reroute_threshold = reroute_threshold
+        self.min_samples = min_samples
+
+    def _score(self, name: str, stats: Dict[str, dict]) -> float:
+        s = stats.get(name)
+        if not s or s["attempts"] < self.min_samples:
+            return 0.0
+        return (self.failure_weight * s["failure_rate"]
+                + self.cold_weight * s["cold_rate"])
+
+    def route(self, client_id: str) -> str:
+        stats = self.recorder.platform_stats()
+        assigned = self.assignment.get(client_id)
+        if assigned is not None:
+            if self._score(assigned, stats) < self.reroute_threshold:
+                return assigned
+            reason = "reroute"
+        else:
+            reason = "assign"
+        best = min(self.platform_names,
+                   key=lambda n: (self._score(n, stats), n))
+        if assigned is not None and best == assigned:
+            return assigned       # degraded, but still the least-bad option
+        self.assignment[client_id] = best
+        self.recorder.route(client_id, best, reason)
+        return best
+
+
 class PlatformFleet:
     """Named platforms + routing on one shared virtual clock."""
 
@@ -111,6 +169,12 @@ class PlatformFleet:
     @property
     def default_platform(self) -> SimulatedFaaSPlatform:
         return self.platforms[self.routing.default]
+
+    def attach_recorder(self, recorder) -> None:
+        """Point every platform's plan telemetry at `recorder` (the
+        routing policy may independently hold the same recorder)."""
+        for p in self.platforms.values():
+            p.recorder = recorder
 
     # ---- scenario knobs ----------------------------------------------
     def set_platform_down(self, name: str, down: bool = True) -> None:

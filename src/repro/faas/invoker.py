@@ -103,6 +103,7 @@ class _RoundState:
         self.global_params = global_params
         self.waiting: deque = deque()            # cap overflow, not yet fired
         self.active = 0                          # invocations in flight
+        self.platform_names: Dict[str, str] = {} # routing decision at start
         self.attempts: Dict[str, int] = {}
         self.failed: Dict[str, List[InvocationOutcome]] = {}
         # cid -> (plan, update, [scheduled events])
@@ -125,12 +126,31 @@ class InvocationEngine:
 
     def __init__(self, invoker, max_retries: int = 1,
                  max_concurrency: Optional[int] = None,
-                 retry_on_timeout: bool = False):
+                 retry_on_timeout: bool = False, recorder=None):
         self.invoker = invoker
         self.max_retries = max_retries
         self.max_concurrency = max_concurrency
         self.retry_on_timeout = retry_on_timeout
+        # optional TraceRecorder (faas/trace.py): one record per resolved
+        # invocation attempt, carrying the routing decision (platform name)
+        self.recorder = recorder
         self._rounds: Dict[int, _RoundState] = {}
+
+    def _record_attempt(self, st: _RoundState, cid: str,
+                        plan: InvocationPlan, attempt: int,
+                        arrival_time: float, status: str) -> None:
+        if self.recorder is None:
+            return
+        outcome = plan.to_outcome()
+        # the platform captured at _start time: platform_of() may be a
+        # *mutating* routing call (TelemetryRoutingPolicy can re-route),
+        # so it must not be re-resolved as a side effect of logging
+        self.recorder.attempt(
+            client_id=cid, platform=st.platform_names.get(cid, "?"),
+            round_number=st.round_number, attempt=attempt,
+            start_time=plan.start_time, arrival_time=arrival_time,
+            cold=plan.cold, cold_start_s=plan.cold_start_s,
+            billed_s=outcome.duration_s, status=status)
 
     # ------------------------------------------------------------------
     def open_round(self, queue: EventQueue, client_ids: Sequence[str],
@@ -183,6 +203,7 @@ class InvocationEngine:
         st.retrying.discard(cid)
         profile = self.invoker.profiles.get(cid, ClientProfile())
         platform = self.invoker.platform_of(cid)
+        st.platform_names[cid] = platform.name
 
         if profile.crash:
             update, nominal_s = None, 0.0
@@ -225,6 +246,8 @@ class InvocationEngine:
         plan, update, _ = st.inflight.pop(cid)
         st.done.add(cid)
         self._release_slot(queue, st, event.time)
+        self._record_attempt(st, cid, plan, st.attempts.get(cid, 0),
+                             event.time, "ok")
         completion = ClientCompletion(
             round_number=st.round_number, client_id=cid,
             outcome=plan.to_outcome(), update=update,
@@ -243,6 +266,8 @@ class InvocationEngine:
         outcome = plan.to_outcome()
         st.failed.setdefault(cid, []).append(outcome)
         attempt = st.attempts.get(cid, 0)
+        self._record_attempt(st, cid, plan, attempt, event.time,
+                             plan.failure or "failed")
 
         retryable = (plan.failure == FAIL_PLATFORM
                      or (plan.failure == FAIL_TIMEOUT
@@ -299,6 +324,10 @@ class InvocationEngine:
                 ev.cancel()
             del st.inflight[cid]
             st.done.add(cid)
+            # crash plans never surface as events — the deadline is the
+            # first (and only) observation, so record the attempt here
+            self._record_attempt(st, cid, plan, st.attempts.get(cid, 0),
+                                 now, plan.failure or "unresponsive")
         # a retry whose INVOKE_START is still queued at close never runs
         # (the start handler drops it): the client missed the round
         dead.extend(sorted(st.retrying))
@@ -309,6 +338,30 @@ class InvocationEngine:
         st.done.update(unstarted)
         self._maybe_gc(st)
         return late, dead, unstarted
+
+    def drain_round(self, round_number: int,
+                    now: float) -> List[Tuple[str, float]]:
+        """Abandon an open round at experiment end: cancel its scheduled
+        events and return (client_id, billable_s) for every in-flight
+        attempt — the provider bills a launched invocation regardless of
+        whether the controller is still listening for its result."""
+        st = self._rounds.get(round_number)
+        if st is None:
+            return []
+        st.closed = True
+        billed = []
+        for cid, (plan, _upd, scheduled) in list(st.inflight.items()):
+            for ev in scheduled:
+                ev.cancel()
+            self._record_attempt(st, cid, plan, st.attempts.get(cid, 0),
+                                 now, "abandoned")
+            billed.append((cid, plan.to_outcome().duration_s))
+            del st.inflight[cid]
+            st.done.add(cid)
+        st.retrying.clear()
+        st.waiting.clear()
+        self._maybe_gc(st)
+        return billed
 
     def unresolved_count(self, round_number: int) -> int:
         """Clients of the round that could still produce an event: in

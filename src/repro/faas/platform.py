@@ -157,7 +157,7 @@ class SimulatedFaaSPlatform:
 
     def __init__(self, config: FaaSConfig = FaaSConfig(),
                  shape: FunctionShape = FunctionShape(), seed: int = 0,
-                 name: str = "sim"):
+                 name: str = "sim", recorder=None):
         self.config = config
         self.shape = shape
         self.name = name
@@ -166,6 +166,10 @@ class SimulatedFaaSPlatform:
         self.clock = VirtualClock()
         self.cold_starts = 0
         self.invocations = 0
+        # optional TraceRecorder (faas/trace.py): every sampled plan feeds
+        # the per-platform cold-start/failure telemetry window — including
+        # crash plans that never surface as events
+        self.recorder = recorder
 
     # ------------------------------------------------------------------
     def _cold_start_latency(self) -> float:
@@ -226,12 +230,15 @@ class SimulatedFaaSPlatform:
         else:
             self._warm.pop(client_id, None)
 
-        return InvocationPlan(
+        plan = InvocationPlan(
             client_id=client_id, start_time=start_time, cold_start_s=cold_s,
             compute_s=compute, jitter_s=jitter, cold=was_cold,
             speed_factor=speed, failure=failure,
             function_timeout_s=self.config.function_timeout_s,
             warm_until=warm_until)
+        if self.recorder is not None:
+            self.recorder.on_plan(self.name, plan, attempt)
+        return plan
 
     def expire_warm(self, client_id: str, now: float) -> bool:
         """Event-driven scale-to-zero: evict iff the lease truly lapsed.

@@ -1,0 +1,170 @@
+"""Event-driven trace export + rolling fleet telemetry.
+
+`TraceRecorder` is the single sink every layer of the simulation reports
+into: the platform reports sampled invocation plans (cold starts), the
+invocation engine reports one record per resolved invocation *attempt*
+(cold start, retry index, billed duration, arrival virtual time, routing
+decision), the cost meter reports every billed charge, and the training
+driver reports every aggregation event.  Records are plain dicts dumped
+as JSONL, so a full experiment round-trips: summing the ``billing``
+records reconstructs ``CostMeter.total`` exactly, and the attempt stream
+replays the schedule the event queue produced.
+
+Because everything runs on the virtual clock, two same-seed runs emit
+byte-identical traces — the recorder never reads wall-clock time.
+
+The recorder also keeps a *rolling window* of per-platform attempt
+outcomes (failures, cold starts), fed exclusively by the platform-side
+`on_plan` hook — one observation per sampled attempt, including crash
+plans that never surface as events — so attaching the same recorder to
+the engine as well never double-counts.  `platform_stats()` exposes it
+as recent failure/cold-start rates, which
+`faas.fleet.TelemetryRoutingPolicy` reads to de-prioritize degraded
+providers (the platforms must therefore carry the recorder, e.g. via
+`PlatformFleet.attach_recorder`).
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+from pathlib import Path
+from typing import Dict, FrozenSet, List, Optional
+
+# record types emitted into the JSONL stream
+REC_ATTEMPT = "attempt"
+REC_BILLING = "billing"
+REC_AGGREGATION = "aggregation"
+REC_ROUTE = "route"
+REC_EVENT = "event"
+
+
+class TraceRecorder:
+    """Collects simulation records and rolling per-platform telemetry."""
+
+    def __init__(self, telemetry_window: int = 50,
+                 event_kinds: Optional[FrozenSet[str]] = None):
+        self.records: List[dict] = []
+        self.telemetry_window = telemetry_window
+        # queue-event logging is opt-in (the attempt stream already covers
+        # the invocation lifecycle); pass e.g. {"round_deadline"}
+        self.event_kinds = event_kinds or frozenset()
+        self._windows: Dict[str, deque] = {}
+        self._round_aliases: Dict[int, int] = {}
+
+    def alias_round(self, engine_round: int, reported_round) -> None:
+        """Barrier-free mode: the engine schedules each invocation as its
+        own synthetic ticket; aliasing maps the ticket onto the current
+        model version (the driver refreshes it at resolution time), so
+        attempt records share a 'round' number space with billing and
+        aggregation records.  The original ticket id is preserved in the
+        record's 'ticket' field."""
+        self._round_aliases[engine_round] = reported_round
+
+    # ---- sinks (called by the simulation layers) ----------------------
+    def attempt(self, *, client_id: str, platform: str, round_number,
+                attempt: int, start_time: float, arrival_time: float,
+                cold: bool, cold_start_s: float, billed_s: float,
+                status: str) -> None:
+        """One resolved invocation attempt (success, failure, or a crash
+        discovered at a deadline).  `status` is "ok" or a failure reason
+        from faas.platform (crash/platform/timeout).  Pure record sink —
+        telemetry windows are fed by `on_plan` (one observation per
+        sampled attempt), never here, so a recorder attached to both the
+        engine and the platforms counts each attempt once."""
+        rec = {
+            "type": REC_ATTEMPT, "client_id": client_id,
+            "platform": platform, "round": round_number,
+            "attempt": attempt, "start_time": start_time,
+            "arrival_time": arrival_time, "cold": cold,
+            "cold_start_s": cold_start_s, "billed_s": billed_s,
+            "status": status,
+        }
+        if round_number in self._round_aliases:
+            rec["ticket"] = round_number
+            rec["round"] = self._round_aliases[round_number]
+        self.records.append(rec)
+
+    def billing(self, *, cost: float, duration_s: float, kind: str,
+                client_id: Optional[str] = None,
+                round_number=None) -> None:
+        """One charge on the cost meter.  Summing the `cost` fields of all
+        billing records reconstructs `CostMeter.total`."""
+        self.records.append({
+            "type": REC_BILLING, "cost": cost, "duration_s": duration_s,
+            "kind": kind, "client_id": client_id, "round": round_number,
+        })
+
+    def aggregation(self, *, time: float, round_number, merged: int,
+                    strategy: str, mode: str) -> None:
+        """One aggregation event (a round close, or an async merge)."""
+        self.records.append({
+            "type": REC_AGGREGATION, "time": time, "round": round_number,
+            "merged": merged, "strategy": strategy, "mode": mode,
+        })
+
+    def route(self, client_id: str, platform: str, reason: str) -> None:
+        """A routing decision (fresh assignment or telemetry re-route)."""
+        self.records.append({
+            "type": REC_ROUTE, "client_id": client_id,
+            "platform": platform, "reason": reason,
+        })
+
+    def on_plan(self, platform: str, plan, attempt: int) -> None:
+        """Platform hook: a sampled invocation plan.  Feeds the cold-start
+        telemetry window even for attempts that never produce an event
+        (crash profiles)."""
+        w = self._windows.setdefault(
+            platform, deque(maxlen=self.telemetry_window))
+        w.append((plan.failure is not None, plan.cold))
+
+    def on_event(self, ev) -> None:
+        """EventQueue hook: called for every popped event; records only
+        the kinds in `event_kinds` (off by default)."""
+        if ev.kind.value in self.event_kinds:
+            self.records.append({
+                "type": REC_EVENT, "time": ev.time, "kind": ev.kind.value,
+                "client_id": ev.client_id, "round": ev.round_number,
+            })
+
+    # ---- telemetry (read by TelemetryRoutingPolicy) -------------------
+    def platform_stats(self) -> Dict[str, dict]:
+        """Recent per-platform rates over the rolling window."""
+        stats = {}
+        for name, w in self._windows.items():
+            n = len(w)
+            failures = sum(1 for failed, _ in w if failed)
+            colds = sum(1 for _, cold in w if cold)
+            stats[name] = {
+                "attempts": n,
+                "failures": failures,
+                "cold_starts": colds,
+                "failure_rate": failures / n if n else 0.0,
+                "cold_rate": colds / n if n else 0.0,
+            }
+        return stats
+
+    # ---- export -------------------------------------------------------
+    def select(self, record_type: str) -> List[dict]:
+        return [r for r in self.records if r["type"] == record_type]
+
+    def billed_total(self) -> float:
+        """Reconstruct the meter total from the trace stream."""
+        return sum(r["cost"] for r in self.select(REC_BILLING))
+
+    def dumps(self) -> str:
+        """The full trace as a JSONL string (deterministic: sorted keys,
+        repr-round-trip floats)."""
+        return "".join(json.dumps(r, sort_keys=True) + "\n"
+                       for r in self.records)
+
+    def to_jsonl(self, path) -> Path:
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(self.dumps())
+        return p
+
+
+def load_jsonl(path) -> List[dict]:
+    """Round-trip loader for exported traces."""
+    return [json.loads(line)
+            for line in Path(path).read_text().splitlines() if line]

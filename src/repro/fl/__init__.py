@@ -1,12 +1,14 @@
 from .client import ClientPool, ClientState
-from .controller import Controller, ExperimentResult, RoundStats
+from .controller import (Controller, ExperimentResult, RoundStats,
+                         TrainingDriver)
 from .executor import VectorizedExecutor
 from .metrics import (bias, effective_update_ratio, invocation_distribution,
-                      weighted_accuracy)
+                      weighted_accuracy, windowed_update_ratio)
 from .tasks import ClassificationTask, TaskConfig
 
 __all__ = ["ClientPool", "ClientState", "Controller", "ExperimentResult",
-           "RoundStats", "VectorizedExecutor",
+           "RoundStats", "TrainingDriver", "VectorizedExecutor",
            "bias", "effective_update_ratio",
            "invocation_distribution", "weighted_accuracy",
+           "windowed_update_ratio",
            "ClassificationTask", "TaskConfig"]

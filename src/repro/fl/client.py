@@ -7,6 +7,7 @@ pushing the update + its measured training time back to the database.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -49,8 +50,11 @@ class ClientPool:
     def client_seed(self, cid: str, round_number: int) -> int:
         """Per-(client, round) training seed — the single source of truth
         shared by the eager loop and the vectorized executor, so both
-        replay identical batch permutations."""
-        return hash((cid, round_number, self.seed)) % (2 ** 31)
+        replay identical batch permutations.  CRC32 rather than hash():
+        Python salts string hashes per interpreter, which would make
+        training trajectories differ between processes."""
+        return zlib.crc32(
+            f"{cid}:{round_number}:{self.seed}".encode()) % (2 ** 31)
 
     # ------------------------------------------------------------------
     def work_fn(self, cid: str, global_params: Pytree,

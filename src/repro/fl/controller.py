@@ -1,22 +1,44 @@
-"""FedLess controller — paper Algorithm 1, Train_Global_Model.
+"""TrainingDriver — mode-agnostic FL runtime on the shared event queue.
 
-The controller is a lightweight process (the paper removed the K8s/OW
-dependency, §IV-A).  It is now an *event consumer*: per round it asks the
-Strategy Manager for a client subset, hands it to the event-driven
-`InvocationEngine`, and drains the shared event queue until the round
-closes — at the round deadline, at the SAFA quorum's k-th success, or at
-the last in-time finish.  Because the queue persists across rounds, a
-straggler's CLIENT_FINISH from round *t* fires during round *t+1* (or
-later) at its true virtual arrival time, and semi-async strategies
-receive it through `Strategy.on_client_finish` exactly then — genuine
-overlapping rounds instead of the old "cache at round close"
-approximation.
+The FedLess controller (paper Algorithm 1, Train_Global_Model) is one
+point on a sync→async spectrum.  This module runs all of it from a
+single event loop over the shared `EventQueue`:
 
-`run_round`/`run` keep their original signatures as thin adapters, so
-experiments, benchmarks and examples run unmodified on the new engine.
+* ``sync`` / ``semi-async`` — today's round-barrier semantics: per round
+  the driver asks the Strategy Manager for a cohort, hands it to the
+  event-driven `InvocationEngine`, and drains the queue until the round
+  closes (deadline, SAFA quorum's k-th success, or last in-time finish).
+  Because the queue persists across rounds, a straggler's CLIENT_FINISH
+  from round *t* fires during round *t+1* (or later) at its true
+  virtual arrival time, and semi-async strategies receive it through
+  `Strategy.on_client_finish` exactly then.  The two names share one
+  code path; the mode label records whether the strategy accepts late
+  updates.
+
+* ``async`` — barrier-free (the Apodotiko / flwr-serverless regime):
+  there is no round at all.  The driver keeps `clients_per_round`
+  logical slots filled, re-invokes a client the moment a slot frees,
+  and delivers every arrival to `Strategy.on_client_finish` with the
+  current global model — barrier-free strategies (FedAsync, FedBuff)
+  return a *new* global model from the hook and the driver versions it
+  continuously.  Each invocation is its own engine ticket with its own
+  crash-detection deadline; clients that keep failing are backed off
+  exponentially (in virtual time) before re-entering the rotation, and
+  a slow client past its ticket deadline keeps running — its stale
+  update merges on arrival with a staleness-damped weight while a
+  replacement keeps throughput up.  `RoundStats` entries are emitted
+  per *aggregation event*, with EUR computed over the window between
+  events (updates delivered / invocations resolved —
+  `metrics.windowed_update_ratio`).
+
+`Controller` remains as a thin alias and `run_round`/`run` keep their
+original signatures, so existing experiments, benchmarks and tests run
+unmodified on the new driver.
 """
 from __future__ import annotations
 
+import itertools
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -28,9 +50,12 @@ from ..faas.cost import CostMeter
 from ..faas.events import EventKind, EventQueue
 from ..faas.invoker import ClientCompletion, InvocationEngine, MockInvoker
 from .client import ClientPool
-from .metrics import bias, effective_update_ratio, weighted_accuracy
+from .metrics import (bias, effective_update_ratio, weighted_accuracy,
+                      windowed_update_ratio)
 
 Pytree = Any
+
+MODES = ("sync", "semi-async", "async")
 
 
 @dataclass
@@ -53,9 +78,13 @@ class RoundStats:
 @dataclass
 class ExperimentResult:
     strategy: str
+    mode: str = "sync"
     rounds: List[RoundStats] = field(default_factory=list)
     final_accuracy: float = 0.0
     accuracy_curve: List[tuple] = field(default_factory=list)
+    # cost attribution (CostMeter breakdown), populated by run()
+    cost_by_client: Dict[str, float] = field(default_factory=dict)
+    cost_by_round: Dict[int, float] = field(default_factory=dict)
 
     @property
     def total_duration_s(self) -> float:
@@ -67,7 +96,17 @@ class ExperimentResult:
 
     @property
     def mean_eur(self) -> float:
-        return float(np.mean([r.eur for r in self.rounds])) if self.rounds else 1.0
+        """Barrier modes: the paper's mean of per-round EURs.  Async mode:
+        the run-level merged/resolved ratio — averaging per-window ratios
+        would overweight the (tiny, mostly-1.0) merge windows and dilute
+        the crash probes concentrated in few windows."""
+        if not self.rounds:
+            return 1.0
+        if self.mode == "async":
+            delivered = sum(len(r.successes) for r in self.rounds)
+            resolved = delivered + sum(len(r.crashed) for r in self.rounds)
+            return windowed_update_ratio(delivered, resolved)
+        return float(np.mean([r.eur for r in self.rounds]))
 
     def invocation_counts(self) -> Dict[str, int]:
         counts: Dict[str, int] = {}
@@ -81,7 +120,21 @@ class ExperimentResult:
         return bias(self.invocation_counts())
 
 
-class Controller:
+class _AsyncTicket:
+    """One logical invocation in barrier-free mode."""
+
+    __slots__ = ("client_id", "version", "deadline", "replaced")
+
+    def __init__(self, client_id: str, version: int, deadline):
+        self.client_id = client_id
+        self.version = version          # model version the client trains on
+        self.deadline = deadline        # crash-detection ROUND_DEADLINE event
+        self.replaced = False           # slot already refilled at deadline?
+
+
+class TrainingDriver:
+    """Mode-agnostic training runtime (see module docstring)."""
+
     def __init__(self, strategy: Strategy, invoker: MockInvoker,
                  pool: ClientPool, history: ClientHistoryDB,
                  cost_meter: Optional[CostMeter] = None,
@@ -89,7 +142,8 @@ class Controller:
                  eval_every: int = 5, eval_fraction: float = 0.2,
                  seed: int = 0, max_retries: int = 1,
                  max_concurrency: Optional[int] = None,
-                 vectorized: bool = False):
+                 vectorized: bool = False,
+                 mode: Optional[str] = None, trace=None):
         self.strategy = strategy
         self.invoker = invoker
         self.pool = pool
@@ -101,18 +155,33 @@ class Controller:
         self.rng = np.random.default_rng(seed)
         self.vectorized = vectorized
         self.platform = invoker.platform
+        if mode is None:
+            mode = ("async" if getattr(strategy, "barrier_free", False)
+                    else "semi-async" if strategy.semi_async else "sync")
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; available: {MODES}")
+        if mode == "async" and not getattr(strategy, "barrier_free", False):
+            raise ValueError(
+                f"strategy {strategy.name!r} has a round barrier; async "
+                f"mode needs a barrier-free strategy (fedasync, fedbuff)")
+        self.mode = mode
+        self.trace = trace
         # one event queue on the platform's clock, shared across rounds —
         # straggler events survive round boundaries
-        self.queue = EventQueue(self.platform.clock)
+        self.queue = EventQueue(self.platform.clock, recorder=trace)
         self.engine = InvocationEngine(invoker, max_retries=max_retries,
-                                       max_concurrency=max_concurrency)
+                                       max_concurrency=max_concurrency,
+                                       recorder=trace)
+        # barrier-free bookkeeping (tickets never collide with round ids)
+        self._tickets = itertools.count(start=1 << 20)
 
     # ------------------------------------------------------------------
     def _evaluate(self, params: Pytree) -> float:
         """Paper §VI-A5: accuracy on a random subset of clients' test sets,
         weighted by test cardinality."""
+        clients = getattr(self.pool, "clients", {})
         ids = [cid for cid in self.pool.client_ids
-               if self.pool.clients[cid].test_dataset is not None]
+               if getattr(clients.get(cid), "test_dataset", None) is not None]
         if not ids:
             return 0.0
         k = max(1, int(len(ids) * self.eval_fraction))
@@ -124,6 +193,22 @@ class Controller:
             per_client.append((acc, len(ds)))
         return weighted_accuracy(per_client)
 
+    def _print_progress(self, label: str, stats: RoundStats) -> None:
+        acc = f" acc={stats.accuracy:.3f}" if stats.accuracy else ""
+        print(f"[{self.strategy.name}] {label} {stats.round_number:3d} "
+              f"eur={stats.eur:.2f} dur={stats.duration_s:6.1f}s "
+              f"cost=${stats.cost:.4f}{acc}")
+
+    def _record_aggregation(self, time: float, round_number: int,
+                            merged: int) -> None:
+        if self.trace is not None:
+            self.trace.aggregation(time=time, round_number=round_number,
+                                   merged=merged,
+                                   strategy=self.strategy.name,
+                                   mode=self.mode)
+
+    # ------------------------------------------------------------------
+    # barrier path (sync / semi-async)
     # ------------------------------------------------------------------
     def _precompute_updates(self, selected: List[str], global_params: Pytree,
                             round_number: int) -> Optional[Dict[str, tuple]]:
@@ -156,16 +241,21 @@ class Controller:
             producing_round=completion.round_number,
             current_round=current_round)
 
-    def _bill_attempts(self, completion: ClientCompletion) -> float:
+    def _bill_attempts(self, completion: ClientCompletion,
+                       round_number: int) -> float:
         """Every attempt of a retried invocation is billed (FedLess retries
         are real invocations on the provider's meter)."""
-        return sum(self.cost.charge(fa.duration_s)
+        return sum(self.cost.charge(fa.duration_s,
+                                    client_id=completion.client_id,
+                                    round_number=round_number)
                    for fa in completion.failed_attempts)
 
-    # ------------------------------------------------------------------
     def run_round(self, global_params: Pytree,
                   round_number: int) -> tuple:
         """One Train_Global_Model iteration. Returns (params, RoundStats)."""
+        if self.mode == "async":
+            raise RuntimeError("run_round is a barrier API; the async mode "
+                               "runs barrier-free — use run()")
         clock = self.queue.clock
         t0 = clock.now
         deadline = t0 + self.round_timeout_s
@@ -202,12 +292,12 @@ class Controller:
                 continue
             if completion.round_number != round_number:
                 # a straggler from an earlier round arriving mid-flight
-                round_cost += self._bill_attempts(completion)
+                round_cost += self._bill_attempts(completion, round_number)
                 if completion.success:
                     straggler_arrivals.append(completion.client_id)
                     self._handle_straggler(completion, ev.time, round_number)
                 continue
-            round_cost += self._bill_attempts(completion)
+            round_cost += self._bill_attempts(completion, round_number)
             retries += completion.attempts - 1
             if completion.success:
                 successes.append(completion)
@@ -247,18 +337,24 @@ class Controller:
             # client-side report (Alg. 1 lines 16-27) — in-time client
             self.history.client_report(out.client_id, round_number,
                                        out.duration_s)
-            round_cost += self.cost.charge(out.duration_s)
+            round_cost += self.cost.charge(out.duration_s,
+                                           client_id=out.client_id,
+                                           round_number=round_number)
         for cid in late_ids:
             # alive but past the deadline: a miss now; its report and its
             # update arrive with its CLIENT_FINISH event in a later round
             self.history.mark_miss(cid, round_number)
-            round_cost += self.cost.charge_straggler(duration)
+            round_cost += self.cost.charge_straggler(duration, client_id=cid,
+                                                     round_number=round_number)
         for comp in failed:
             self.history.mark_miss(comp.outcome.client_id, round_number)
-            round_cost += self.cost.charge_straggler(duration)
+            round_cost += self.cost.charge_straggler(
+                duration, client_id=comp.outcome.client_id,
+                round_number=round_number)
         for cid in dead_ids:
             self.history.mark_miss(cid, round_number)
-            round_cost += self.cost.charge_straggler(duration)
+            round_cost += self.cost.charge_straggler(duration, client_id=cid,
+                                                     round_number=round_number)
         for cid in unstarted:
             # never invoked (concurrency cap): a miss, but nothing billed
             self.history.mark_miss(cid, round_number)
@@ -270,6 +366,8 @@ class Controller:
                                              now=close_time)
         if new_params is None:
             new_params = global_params
+        self._record_aggregation(close_time, round_number,
+                                 self.strategy.last_aggregate_count)
 
         crashed_ids = ([c.outcome.client_id for c in failed]
                        + dead_ids + unstarted)
@@ -286,9 +384,265 @@ class Controller:
         return new_params, stats
 
     # ------------------------------------------------------------------
+    # barrier-free path (async)
+    # ------------------------------------------------------------------
+    def _run_async(self, global_params: Pytree, n_rounds: int,
+                   verbose: bool = False) -> tuple:
+        """Barrier-free loop: deliver `n_rounds × clients_per_round`
+        updates (the same update budget a clean sync run would get),
+        emitting one RoundStats window per aggregation event."""
+        cohort_size = self.strategy.config.clients_per_round
+        target = n_rounds * cohort_size
+        # the vmapped executor batches a round cohort; one-client tickets
+        # have no cohort, so async always trains through the per-client
+        # work_fn (vectorized is a barrier-mode knob)
+        result = ExperimentResult(strategy=self.strategy.name, mode=self.mode)
+        params = global_params
+        clock = self.queue.clock
+
+        version = 0              # global model version (bumps per merge)
+        delivered_total = 0
+        next_eval = self.eval_every * cohort_size if self.eval_every else 0
+        tickets: Dict[int, _AsyncTicket] = {}
+        in_flight: set = set()
+        fail_streak: Dict[str, int] = {}
+        cooldown_until: Dict[str, float] = {}
+        rotation = deque(self.pool.client_ids)
+
+        window = self._fresh_window(clock.now)
+
+        # hard budget so a fully-dead population terminates instead of
+        # probing forever: the queue drains once nothing new is issued
+        issue_budget = target * 20 + 10 * len(self.pool.client_ids)
+        issued_total = 0
+
+        def issue(cid: str, when: float) -> None:
+            nonlocal issued_total
+            if issued_total >= issue_budget:
+                return
+            issued_total += 1
+            tid = next(self._tickets)
+            if self.trace is not None:
+                # attempt records join billing/aggregation on model version
+                self.trace.alias_round(tid, version)
+            self.engine.open_round(self.queue, [cid], params, tid, when)
+            dl = self.queue.schedule(when + self.round_timeout_s,
+                                     EventKind.ROUND_DEADLINE,
+                                     round_number=tid)
+            tickets[tid] = _AsyncTicket(cid, version, dl)
+            in_flight.add(cid)
+            window["issued"].append(cid)
+
+        def next_client(now: float) -> Optional[str]:
+            """Deterministic cyclic rotation over the whole population,
+            skipping in-flight clients and those in failure backoff; if
+            everyone eligible is cooling down, probe the first one."""
+            fallback = None
+            for _ in range(len(rotation)):
+                cid = rotation[0]
+                rotation.rotate(-1)
+                if cid in in_flight:
+                    continue
+                if cooldown_until.get(cid, 0.0) <= now:
+                    return cid
+                if fallback is None:
+                    fallback = cid
+            return fallback
+
+        def refill(now: float) -> None:
+            cid = next_client(now)
+            if cid is not None:
+                issue(cid, now)
+
+        def penalize(cid: str, now: float) -> None:
+            """Exponential (virtual-time) backoff for failing clients —
+            the async twin of the paper's Eq. 1 cooldown."""
+            fail_streak[cid] = fail_streak.get(cid, 0) + 1
+            cooldown_until[cid] = now + (self.round_timeout_s
+                                         * 2.0 ** (fail_streak[cid] - 1))
+
+        def close_window(now: float, merged: int,
+                         aggregated: bool = True) -> None:
+            nonlocal window
+            stats = RoundStats(
+                round_number=len(result.rounds),
+                selected=list(window["issued"]),
+                successes=list(window["delivered"]),
+                late=list(window["late"]), crashed=list(window["crashed"]),
+                duration_s=float(now - window["start"]),
+                # denominator: invocations *resolved* this window (every
+                # one of them was issued) — delivered updates plus wasted
+                # crash/failure probes; telescopes to merged/issued over
+                # the run without in-flight overhang distortion
+                eur=windowed_update_ratio(
+                    len(window["delivered"]),
+                    len(window["delivered"]) + len(window["crashed"])),
+                cost=self.cost.total - window["cost0"],
+                aggregated_updates=merged, retries=window["retries"],
+                straggler_arrivals=list(window["straggler_arrivals"]))
+            nonlocal next_eval
+            if aggregated:
+                self._record_aggregation(now, stats.round_number, merged)
+            # eval cadence matches the barrier modes: every eval_every
+            # rounds' worth of delivered updates, not every window (a
+            # FedAsync window is a single update)
+            if next_eval and delivered_total >= next_eval:
+                stats.accuracy = self._evaluate(params)
+                result.accuracy_curve.append((stats.round_number,
+                                              stats.accuracy))
+                next_eval += self.eval_every * cohort_size
+            result.rounds.append(stats)
+            if verbose:
+                self._print_progress("merge", stats)
+            window = self._fresh_window(now)
+
+        # honor the per-round in-flight cap in async mode too: the cap
+        # bounds the standing slot count (a late ticket's replacement can
+        # exceed it transiently, as in barrier mode's overlapping rounds)
+        slots = cohort_size
+        if self.engine.max_concurrency is not None:
+            slots = min(slots, self.engine.max_concurrency)
+        for cid in self.strategy.select(self.pool.client_ids, 0)[:slots]:
+            issue(cid, clock.now)
+
+        while delivered_total < target:
+            ev = self.queue.pop()
+            if ev is None:
+                break                       # population exhausted
+            # refresh the trace alias to the *current* version before the
+            # engine records anything for this ticket: attempt records
+            # then share the resolution-time version space with billing
+            # records (the "ticket" field keeps the issue identity)
+            if (self.trace is not None and ev.round_number in tickets):
+                self.trace.alias_round(ev.round_number, version)
+            if ev.kind is EventKind.ROUND_DEADLINE:
+                info = tickets.get(ev.round_number)
+                if info is None:
+                    continue
+                # single-client tickets: `unstarted` cannot occur (the
+                # engine cap is per-ticket and each ticket fires one client)
+                late, dead, _unstarted = self.engine.close_round(
+                    ev.round_number, ev.time)
+                for cid in dead:
+                    # never produced an observable event: crash profile or
+                    # an unobserved timeout kill — the deadline discovers it
+                    tickets.pop(ev.round_number, None)
+                    in_flight.discard(cid)
+                    self.history.mark_miss(cid, info.version)
+                    self.cost.charge_straggler(self.round_timeout_s,
+                                               client_id=cid,
+                                               round_number=version)
+                    penalize(cid, ev.time)
+                    window["crashed"].append(cid)
+                    refill(ev.time)
+                for cid in late:
+                    # alive but slow: let it keep running — its update will
+                    # merge on arrival, staleness-damped — and refill the
+                    # slot so throughput holds
+                    info.replaced = True
+                    self.history.mark_miss(cid, info.version)
+                    window["late"].append(cid)
+                    refill(ev.time)
+                continue
+
+            completion = self.engine.handle(self.queue, ev)
+            if completion is None:
+                continue
+            info = tickets.pop(completion.round_number, None)
+            if info is None:
+                continue                    # cross-mode leftovers
+            info.deadline.cancel()
+            cid = completion.client_id
+            in_flight.discard(cid)
+            window["retries"] += completion.attempts - 1
+            # two number spaces, deliberately: charges key on the current
+            # model version = the accumulating window's index (so
+            # cost_by_round joins RoundStats.round_number), while history
+            # keys on the ticket's *issue* version (what the client
+            # actually trained against — the staleness base)
+            self._bill_attempts(completion, version)
+
+            if not completion.success:
+                # paper §VI-C straggler convention, as in barrier mode:
+                # a terminal failure is charged for its whole (ticket)
+                # window, keeping cross-mode cost comparisons apples-to-
+                # apples; the earlier retried attempts were billed above
+                self.cost.charge_straggler(self.round_timeout_s,
+                                           client_id=cid,
+                                           round_number=version)
+                self.history.mark_miss(cid, info.version)
+                penalize(cid, ev.time)
+                window["crashed"].append(cid)
+                if not info.replaced:
+                    refill(ev.time)
+                continue
+
+            out = completion.outcome
+            self.cost.charge(out.duration_s, client_id=cid,
+                             round_number=version)
+            # client-side report corrects the miss a late ticket recorded
+            self.history.client_report(cid, info.version, out.duration_s)
+            if not info.replaced:
+                self.history.mark_success(cid, info.version)
+                refill(ev.time)             # issue lands in this window
+            else:
+                window["straggler_arrivals"].append(cid)
+            fail_streak[cid] = 0
+            cooldown_until.pop(cid, None)
+
+            delivered_total += 1
+            window["delivered"].append(cid)
+            new_params = self.strategy.on_client_finish(
+                completion.update, arrival_time=ev.time,
+                producing_round=info.version, current_round=version,
+                global_params=params)
+            if new_params is not None:
+                params = new_params
+                version += 1
+                close_window(ev.time, self.strategy.last_aggregate_count)
+
+        # abandoned in-flight invocations are still launched work: the
+        # provider bills them whether or not we keep listening, so drain
+        # and charge them before closing the books (they land in the
+        # trailing accounting window)
+        for tid, info in sorted(tickets.items()):
+            info.deadline.cancel()
+            if self.trace is not None:
+                self.trace.alias_round(tid, version)
+            for cid, billed_s in self.engine.drain_round(tid, clock.now):
+                self.cost.charge(billed_s, client_id=cid,
+                                 round_number=version, kind="abandoned")
+        tickets.clear()
+
+        # flush partially-buffered strategy state (FedBuff's trailing <K
+        # buffer) so every delivered update reaches the final model …
+        final = self.strategy.finalize(params, current_round=version)
+        if final is not None:
+            params = final
+            version += 1
+            close_window(clock.now, self.strategy.last_aggregate_count)
+        elif (window["delivered"] or window["crashed"] or window["late"]
+                or self.cost.total > window["cost0"]):
+            # … and account the trailing activity (charges, deliveries,
+            # crash probes) that landed after the last aggregation event
+            close_window(clock.now, 0, aggregated=False)
+
+        result.final_accuracy = self._evaluate(params)
+        result.cost_by_client = dict(self.cost.by_client)
+        result.cost_by_round = dict(self.cost.rounds)
+        return params, result
+
+    def _fresh_window(self, now: float) -> Dict[str, Any]:
+        return {"start": now, "issued": [], "delivered": [], "late": [],
+                "crashed": [], "straggler_arrivals": [], "retries": 0,
+                "cost0": self.cost.total}
+
+    # ------------------------------------------------------------------
     def run(self, global_params: Pytree, n_rounds: int,
             verbose: bool = False) -> tuple:
-        result = ExperimentResult(strategy=self.strategy.name)
+        if self.mode == "async":
+            return self._run_async(global_params, n_rounds, verbose=verbose)
+        result = ExperimentResult(strategy=self.strategy.name, mode=self.mode)
         params = global_params
         for rnd in range(n_rounds):
             params, stats = self.run_round(params, rnd)
@@ -297,9 +651,12 @@ class Controller:
                 result.accuracy_curve.append((rnd, stats.accuracy))
             result.rounds.append(stats)
             if verbose:
-                acc = f" acc={stats.accuracy:.3f}" if stats.accuracy else ""
-                print(f"[{self.strategy.name}] round {rnd:3d} "
-                      f"eur={stats.eur:.2f} dur={stats.duration_s:6.1f}s "
-                      f"cost=${stats.cost:.4f}{acc}")
+                self._print_progress("round", stats)
         result.final_accuracy = self._evaluate(params)
+        result.cost_by_client = dict(self.cost.by_client)
+        result.cost_by_round = dict(self.cost.rounds)
         return params, result
+
+
+# Back-compat: the pre-refactor name; every call site keeps working.
+Controller = TrainingDriver

@@ -20,6 +20,7 @@ from ..data.synthetic import ArrayDataset
 from ..faas.cost import CostMeter
 from ..faas.invoker import MockInvoker
 from ..faas.platform import ClientProfile, FaaSConfig, SimulatedFaaSPlatform
+from ..faas.trace import TraceRecorder
 from .client import ClientPool
 from .controller import Controller, ExperimentResult
 from .tasks import ClassificationTask, TaskConfig
@@ -57,6 +58,16 @@ class ExperimentConfig:
     max_concurrency: Optional[int] = None   # per-round in-flight cap
     platforms: Optional[Dict[str, str]] = None  # client -> provider name
     default_platform: str = "gcf-gen2"
+    # training-mode surface (fl/controller.TrainingDriver)
+    # None → derived from the strategy: async for barrier-free strategies
+    # (fedasync, fedbuff), semi-async/sync otherwise
+    mode: Optional[str] = None
+    trace_path: Optional[str] = None  # export the JSONL trace here
+    # barrier-free strategy knobs (core/strategies.StrategyConfig)
+    buffer_k: int = 4
+    async_alpha: float = 0.6
+    server_lr: float = 0.7
+    staleness_exponent: float = 0.5
 
 
 def make_straggler_profiles(client_ids, scenario: ScenarioConfig
@@ -93,10 +104,13 @@ def run_experiment(task: ClassificationTask,
     strat_cfg = StrategyConfig(
         clients_per_round=config.clients_per_round,
         max_rounds=config.n_rounds, tau=config.tau,
-        fedprox_mu=config.fedprox_mu)
+        fedprox_mu=config.fedprox_mu, buffer_k=config.buffer_k,
+        async_alpha=config.async_alpha, server_lr=config.server_lr,
+        staleness_exponent=config.staleness_exponent)
     strategy = make_strategy(config.strategy, strat_cfg, history,
                              seed=config.seed)
 
+    recorder = TraceRecorder() if config.trace_path else None
     pool = ClientPool(task, train_partitions, test_partitions,
                       proximal_mu=strategy.proximal_mu(), seed=config.seed)
     profiles = make_straggler_profiles(pool.client_ids, config.scenario)
@@ -105,8 +119,11 @@ def run_experiment(task: ClassificationTask,
         invoker = MultiPlatformInvoker(
             pool.work_fn, config.platforms, profiles,
             default=config.default_platform, seed=config.seed)
+        if recorder is not None:
+            invoker.fleet.attach_recorder(recorder)
     else:
-        platform = SimulatedFaaSPlatform(config.faas, seed=config.seed)
+        platform = SimulatedFaaSPlatform(config.faas, seed=config.seed,
+                                         recorder=recorder)
         invoker = MockInvoker(platform, pool.work_fn, profiles)
 
     vectorized = config.vectorized
@@ -115,14 +132,16 @@ def run_experiment(task: ClassificationTask,
         vectorized = jax.default_backend() != "cpu"
 
     controller = Controller(
-        strategy, invoker, pool, history, CostMeter(),
+        strategy, invoker, pool, history, CostMeter(trace=recorder),
         round_timeout_s=config.scenario.round_timeout_s,
         eval_every=config.eval_every, seed=config.seed,
         max_retries=config.max_retries,
         max_concurrency=config.max_concurrency,
-        vectorized=vectorized)
+        vectorized=vectorized, mode=config.mode, trace=recorder)
 
     params = (initial_params if initial_params is not None
               else task.init_params(config.seed))
     _, result = controller.run(params, config.n_rounds, verbose=verbose)
+    if recorder is not None:
+        recorder.to_jsonl(config.trace_path)
     return result

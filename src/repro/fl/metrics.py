@@ -1,6 +1,10 @@
 """Strategy-quality metrics — paper §VI-A5.
 
 EUR (effective update ratio): successful / selected clients in a round.
+In barrier-free (async) mode there is no round cohort, so the per-round
+ratio is degenerate; `windowed_update_ratio` is the async-comparable
+form — updates merged / invocations issued over a window of virtual
+time (the span between consecutive aggregation events).
 Bias: difference between the invocation counts of the most- and
 least-invoked clients over the whole session.
 Weighted accuracy: per-client test accuracy weighted by test-set
@@ -15,6 +19,16 @@ import numpy as np
 
 def effective_update_ratio(n_success: int, n_selected: int) -> float:
     return n_success / n_selected if n_selected else 1.0
+
+
+def windowed_update_ratio(n_merged: int, n_resolved: int) -> float:
+    """Async-mode EUR: updates merged into the global model per
+    invocation *resolved* during a wall-clock (virtual-time) window —
+    every resolved invocation was issued, so summed over a run this
+    telescopes to merged/issued without crediting or debiting the
+    invocations still in flight at the window edge.  Windows with no
+    resolutions report 1.0 (nothing was wasted)."""
+    return effective_update_ratio(n_merged, n_resolved)
 
 
 def bias(invocations: Dict[str, int]) -> int:

@@ -1,0 +1,346 @@
+"""Tests for the barrier-free training runtime and trace export.
+
+Covers: the mode-agnostic TrainingDriver (mode derivation, barrier API
+guard), FedAsync merge-per-arrival with staleness damping, FedBuff
+buffer-K flushes, crash detection + exponential backoff in the async
+rotation, windowed EUR accounting, trace determinism and the
+billing-record round-trip, and the telemetry-reactive routing policy.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ClientHistoryDB, ClientUpdate, StrategyConfig,
+                        make_strategy)
+from repro.faas import (ClientProfile, CostMeter, FaaSConfig, MockInvoker,
+                        SimulatedFaaSPlatform, TelemetryRoutingPolicy,
+                        TraceRecorder)
+from repro.fl.controller import TrainingDriver
+
+
+# ---------------------------------------------------------------- helpers
+def _work_fn(cid, params, rnd):
+    return ClientUpdate(cid, {"w": jnp.full((4,), 1.0)}, 10, rnd), 10.0
+
+
+class _StubPool:
+    def __init__(self, client_ids):
+        self._ids = list(client_ids)
+        self.clients = {}
+
+    @property
+    def client_ids(self):
+        return self._ids
+
+
+def _driver(client_ids, strategy_name, profiles=None, cohort=3,
+            round_timeout_s=30.0, seed=0, trace=None, jitter=0.0,
+            failure_rate=0.0, mode=None, max_concurrency=None, **strat_kw):
+    history = ClientHistoryDB()
+    history.ensure(client_ids)
+    strategy = make_strategy(
+        strategy_name,
+        StrategyConfig(clients_per_round=cohort, max_rounds=20, **strat_kw),
+        history, seed=seed)
+    platform = SimulatedFaaSPlatform(
+        FaaSConfig(cold_start_median_s=2.0, cold_start_sigma=0.0,
+                   perf_variation=(1.0, 1.0), failure_rate=failure_rate,
+                   network_jitter_s=jitter),
+        seed=seed, recorder=trace)
+    invoker = MockInvoker(platform, _work_fn, profiles or {})
+    return TrainingDriver(strategy, invoker, _StubPool(client_ids), history,
+                          CostMeter(trace=trace),
+                          round_timeout_s=round_timeout_s, eval_every=0,
+                          max_concurrency=max_concurrency,
+                          mode=mode, trace=trace)
+
+
+# ---------------------------------------------------------------- modes
+def test_mode_derived_from_strategy():
+    assert _driver(["a"], "fedavg").mode == "sync"
+    assert _driver(["a"], "fedlesscan").mode == "semi-async"
+    assert _driver(["a"], "fedasync").mode == "async"
+    assert _driver(["a"], "fedbuff").mode == "async"
+
+
+def test_async_mode_requires_barrier_free_strategy():
+    with pytest.raises(ValueError, match="barrier"):
+        _driver(["a"], "fedavg", mode="async")
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError, match="unknown mode"):
+        _driver(["a"], "fedavg", mode="turbo")
+
+
+# ---------------------------------------------------------------- fedasync
+def test_fedasync_merges_every_arrival_and_reinvokes():
+    d = _driver(["a", "b", "c"], "fedasync", cohort=3)
+    params, res = d.run({"w": jnp.zeros(4)}, 4)
+    # budget: 4 "rounds" x cohort 3 = 12 delivered updates, merged 1:1
+    # (a trailing accounting window may follow, billing abandoned
+    # in-flight invocations without an aggregation)
+    merges = [r for r in res.rounds if r.aggregated_updates > 0]
+    assert len(merges) == 12
+    assert all(r.aggregated_updates == 1 for r in merges)
+    assert sum(len(r.successes) for r in res.rounds) == 12
+    # every window re-invoked exactly one client: EUR 1.0 throughout
+    assert res.mean_eur == pytest.approx(1.0)
+    # the global model moved toward the clients' w=1
+    assert float(params["w"][0]) > 0.9
+    assert res.mode == "async"
+
+
+def test_fedasync_staleness_damps_late_updates():
+    cfg = StrategyConfig(clients_per_round=2, async_alpha=0.5,
+                         staleness_exponent=1.0)
+    history = ClientHistoryDB()
+    strat = make_strategy("fedasync", cfg, history)
+    g = {"w": jnp.zeros(2)}
+    upd = ClientUpdate("c", {"w": jnp.ones(2)}, 10, 0)
+    fresh = strat.on_client_finish(upd, arrival_time=1.0, producing_round=5,
+                                   current_round=5, global_params=g)
+    stale = strat.on_client_finish(upd, arrival_time=1.0, producing_round=1,
+                                   current_round=5, global_params=g)
+    # staleness 0: w <- 0.5*1; staleness 4: alpha/(4+1) = 0.1
+    assert float(fresh["w"][0]) == pytest.approx(0.5, abs=1e-5)
+    assert float(stale["w"][0]) == pytest.approx(0.1, abs=1e-5)
+    # barrier delivery (no global params) keeps the old behaviour: no merge
+    assert strat.on_client_finish(upd, 1.0, 5, 5) is None
+
+
+# ---------------------------------------------------------------- fedbuff
+def test_fedbuff_flushes_every_k_arrivals():
+    d = _driver(["a", "b", "c", "d"], "fedbuff", cohort=4, buffer_k=2)
+    params, res = d.run({"w": jnp.zeros(4)}, 3)
+    # 3 x 4 = 12 updates, flushed in pairs -> 6 aggregation windows
+    merges = [r for r in res.rounds if r.aggregated_updates > 0]
+    assert len(merges) == 6
+    assert all(r.aggregated_updates == 2 for r in merges)
+    # six server steps of (1-eta)*w + eta*1 from w=0: 1 - 0.3^6
+    assert float(params["w"][0]) == pytest.approx(1.0 - 0.3 ** 6, abs=1e-4)
+
+
+def test_fedbuff_finalize_flushes_partial_buffer():
+    """A trailing buffer of < K delivered updates still reaches the final
+    model (Strategy.finalize at the end of the barrier-free run)."""
+    # budget 1 x 3 = 3 deliveries with K=2: one flush + one buffered update
+    d = _driver(["a", "b", "c"], "fedbuff", cohort=3, buffer_k=2)
+    params, res = d.run({"w": jnp.zeros(4)}, 1)
+    assert sum(r.aggregated_updates for r in res.rounds) == 3
+    assert sum(len(r.successes) for r in res.rounds) == 3
+    # the finalize flush moved the model beyond the single K=2 merge
+    one_flush = 1.0 - (1.0 - 0.7)          # eta=0.7, one merge of w=1
+    assert float(params["w"][0]) > one_flush
+
+
+def test_async_honors_concurrency_cap():
+    from repro.faas import EventKind
+    d = _driver(["a", "b", "c", "d"], "fedasync", cohort=4,
+                max_concurrency=1)
+    _, res = d.run({"w": jnp.zeros(4)}, 2)
+    starts = sorted(ev.time for ev in d.queue.trace
+                    if ev.kind is EventKind.INVOKE_START)
+    finishes = sorted(ev.time for ev in d.queue.trace
+                      if ev.kind is EventKind.CLIENT_FINISH)
+    # one slot: invocation i+1 never starts before finish i
+    for i, start in enumerate(starts[1:]):
+        assert start >= finishes[i]
+
+
+# ---------------------------------------------------------------- failures
+def test_async_crash_detection_backoff_and_eur():
+    profiles = {"dead": ClientProfile(crash=True)}
+    d = _driver(["a", "b", "dead"], "fedasync", cohort=3, profiles=profiles)
+    params, res = d.run({"w": jnp.zeros(4)}, 6)
+    crashed = [cid for r in res.rounds for cid in r.crashed]
+    assert "dead" in crashed
+    # exponential backoff: the dead client is probed, penalized, and
+    # re-enters only after its (doubling) cooldown — far fewer probes
+    # than merge windows
+    assert 0 < len(crashed) <= 4
+    # EUR dips below 1 in the windows that paid for a crash probe, but
+    # the run-level ratio stays high because the rotation routes around it
+    assert any(r.eur < 1.0 for r in res.rounds)
+    assert res.mean_eur > 0.8
+    # crash probes are billed as whole-window stragglers
+    assert "dead" in d.cost.by_client
+    history_dead = d.history.get("dead")
+    assert history_dead.failures == len(crashed)
+
+
+def test_async_slow_client_merges_stale_on_arrival():
+    """A slow client past its ticket deadline keeps running: a replacement
+    refills the slot, and the late update merges on arrival."""
+    profiles = {"slow": ClientProfile(slow_factor=5.0)}   # 2 + 50 s > 30 s
+    d = _driver(["a", "b", "slow"], "fedasync", cohort=3, profiles=profiles)
+    params, res = d.run({"w": jnp.zeros(4)}, 5)
+    late = [cid for r in res.rounds for cid in r.late]
+    arrivals = [cid for r in res.rounds for cid in r.straggler_arrivals]
+    assert "slow" in late
+    assert "slow" in arrivals          # it did merge, staleness-damped
+    delivered = [cid for r in res.rounds for cid in r.successes]
+    assert "slow" in delivered
+
+
+def test_async_termination_bills_abandoned_inflight():
+    """The run stops listening at the update budget, but the provider
+    still bills the invocations that were already launched and left in
+    flight (unfired INVOKE_STARTs at exit correctly bill nothing)."""
+    trace = TraceRecorder()
+    # heterogeneous speeds desynchronize finishes, so the budget-reaching
+    # delivery leaves slower clients' launched invocations pending
+    profiles = {"b": ClientProfile(slow_factor=1.4),
+                "c": ClientProfile(slow_factor=1.9)}
+    d = _driver(["a", "b", "c"], "fedasync", cohort=3, profiles=profiles,
+                round_timeout_s=60.0, trace=trace)
+    d.run({"w": jnp.zeros(4)}, 2)
+    abandoned = [r for r in trace.select("attempt")
+                 if r["status"] == "abandoned"]
+    assert abandoned                          # refilled slots at exit
+    billed = [r for r in trace.select("billing")
+              if r["kind"] == "abandoned"]
+    assert len(billed) == len(abandoned)
+    # and the books still round-trip exactly
+    assert trace.billed_total() == pytest.approx(d.cost.total, abs=1e-9)
+
+
+# ---------------------------------------------------------------- barrier API
+def test_run_round_rejects_async_mode():
+    d = _driver(["a"], "fedasync")
+    with pytest.raises(RuntimeError, match="barrier"):
+        d.run_round({"w": jnp.zeros(4)}, 0)
+
+
+def test_controller_alias_still_importable():
+    from repro.fl.controller import Controller
+    assert Controller is TrainingDriver
+
+
+# ---------------------------------------------------------------- trace
+def _run_traced(strategy_name, seed=0):
+    trace = TraceRecorder()
+    profiles = {"slow": ClientProfile(slow_factor=5.0),
+                "dead": ClientProfile(crash=True)}
+    d = _driver(["a", "b", "c", "slow", "dead"], strategy_name,
+                profiles=profiles, cohort=3, trace=trace, jitter=0.5,
+                failure_rate=0.0005, seed=seed)
+    d.run({"w": jnp.zeros(4)}, 4)
+    return trace, d
+
+
+@pytest.mark.parametrize("strategy", ["fedlesscan", "fedasync", "fedbuff"])
+def test_trace_billing_roundtrip(strategy):
+    """Every billed attempt is reconstructible from the trace records:
+    summing the billing stream reproduces CostMeter.total exactly."""
+    trace, d = _run_traced(strategy)
+    assert d.cost.total > 0
+    assert trace.billed_total() == pytest.approx(d.cost.total, abs=1e-9)
+    billing = trace.select("billing")
+    assert len(billing) == d.cost.invocations
+    # attempt records carry the routing decision and arrival times
+    attempts = trace.select("attempt")
+    assert attempts and all(a["platform"] == "sim" for a in attempts)
+    assert all(a["arrival_time"] >= a["start_time"] for a in attempts)
+    # aggregation events recorded once per merge window
+    assert len(trace.select("aggregation")) > 0
+
+
+@pytest.mark.parametrize("strategy", ["fedasync", "fedbuff", "fedlesscan"])
+def test_trace_is_deterministic(strategy):
+    t1, _ = _run_traced(strategy)
+    t2, _ = _run_traced(strategy)
+    assert t1.dumps() == t2.dumps()
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    from repro.faas import load_jsonl
+    trace, d = _run_traced("fedasync")
+    p = trace.to_jsonl(tmp_path / "trace.jsonl")
+    records = load_jsonl(p)
+    assert len(records) == len(trace.records)
+    total = sum(r["cost"] for r in records if r["type"] == "billing")
+    assert total == pytest.approx(d.cost.total, abs=1e-9)
+
+
+# ---------------------------------------------------- acceptance (EUR)
+def test_async_eur_matches_or_beats_semi_async_under_stragglers():
+    """30% stragglers (half slow, half crash): the barrier-free modes
+    waste no round slots on stragglers after backoff kicks in, so their
+    windowed EUR is at least the semi-async per-round EUR."""
+    ids = [f"c{i:02d}" for i in range(20)]
+    rng = np.random.default_rng(0)
+    chosen = rng.choice(ids, size=6, replace=False)
+    profiles = {cid: (ClientProfile(slow_factor=6.0) if i < 3
+                      else ClientProfile(crash=True))
+                for i, cid in enumerate(chosen)}
+
+    def eur_of(name):
+        d = _driver(ids, name, profiles=profiles, cohort=6, seed=0)
+        _, res = d.run({"w": jnp.zeros(4)}, 6)
+        return res.mean_eur
+
+    semi = eur_of("fedlesscan")
+    assert eur_of("fedasync") >= semi
+    assert eur_of("fedbuff") >= semi
+
+
+# ---------------------------------------------------------------- routing
+class _PlanStub:
+    def __init__(self, failure, cold):
+        self.failure = failure
+        self.cold = cold
+
+
+def _feed_attempts(trace, platform, n_fail, n_ok, cold=False):
+    # telemetry windows are fed by the platform-side on_plan hook
+    for i in range(n_fail + n_ok):
+        trace.on_plan(platform,
+                      _PlanStub("platform" if i < n_fail else None, cold),
+                      attempt=0)
+
+
+def test_telemetry_routing_prefers_healthy_platform():
+    trace = TraceRecorder()
+    _feed_attempts(trace, "flaky", n_fail=8, n_ok=2)
+    _feed_attempts(trace, "healthy", n_fail=0, n_ok=10)
+    policy = TelemetryRoutingPolicy(["flaky", "healthy"], trace,
+                                    default="flaky")
+    assert policy.route("new-client") == "healthy"
+    # sticky afterwards
+    assert policy.route("new-client") == "healthy"
+    # the decision was recorded in the trace stream
+    routes = trace.select("route")
+    assert routes[-1]["platform"] == "healthy"
+
+
+def test_telemetry_routing_reroutes_degraded_assignment():
+    trace = TraceRecorder()
+    policy = TelemetryRoutingPolicy(["a-plat", "b-plat"], trace,
+                                    assignment={"c0": "a-plat"},
+                                    reroute_threshold=0.5)
+    # healthy: assignment is sticky
+    _feed_attempts(trace, "a-plat", n_fail=0, n_ok=10)
+    assert policy.route("c0") == "a-plat"
+    # outage on a-plat: observed failure rate crosses the threshold
+    _feed_attempts(trace, "a-plat", n_fail=40, n_ok=0)
+    _feed_attempts(trace, "b-plat", n_fail=0, n_ok=10)
+    assert policy.route("c0") == "b-plat"
+    assert any(r["reason"] == "reroute" for r in trace.select("route"))
+
+
+def test_telemetry_routing_ignores_thin_evidence():
+    trace = TraceRecorder()
+    _feed_attempts(trace, "b-plat", n_fail=2, n_ok=0)   # < min_samples
+    policy = TelemetryRoutingPolicy(["a-plat", "b-plat"], trace,
+                                    min_samples=5)
+    # no platform has enough samples: deterministic name tie-break
+    assert policy.route("c0") == "a-plat"
+
+
+def test_cold_start_rate_breaks_failure_ties():
+    trace = TraceRecorder()
+    _feed_attempts(trace, "cold-plat", n_fail=0, n_ok=10, cold=True)
+    _feed_attempts(trace, "warm-plat", n_fail=0, n_ok=10, cold=False)
+    policy = TelemetryRoutingPolicy(["cold-plat", "warm-plat"], trace)
+    assert policy.route("c0") == "warm-plat"

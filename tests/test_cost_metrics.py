@@ -1,0 +1,144 @@
+"""Dedicated coverage for faas/cost.py and fl/metrics.py.
+
+Pins the GCF billing semantics the experiment tables rest on: the 100 ms
+ceil, the straggler whole-round charge, the free-tier discount (both
+paths), the CostMeter per-client/per-round attribution, and the metric
+edge cases (EUR, windowed EUR, bias, weighted accuracy).
+"""
+import numpy as np
+import pytest
+
+from repro.faas.cost import (CostMeter, FreeTierAllowance, FunctionShape,
+                             PriceBook, invocation_cost,
+                             straggler_invocation_cost)
+from repro.fl.metrics import (bias, effective_update_ratio,
+                              invocation_distribution, weighted_accuracy,
+                              windowed_update_ratio)
+
+SHAPE = FunctionShape(memory_mb=2048, vcpus=1.0)
+
+
+# ---------------------------------------------------------------- billing
+def test_billing_ceils_to_100ms_increments():
+    # anything in (0.2, 0.3] bills identically to exactly 0.3 s
+    assert invocation_cost(0.201, SHAPE) == pytest.approx(
+        invocation_cost(0.3, SHAPE))
+    assert invocation_cost(0.299, SHAPE) == pytest.approx(
+        invocation_cost(0.3, SHAPE))
+    # but crosses to the next increment above it
+    assert invocation_cost(0.301, SHAPE) > invocation_cost(0.3, SHAPE)
+
+
+def test_billing_has_100ms_minimum():
+    assert invocation_cost(0.0001, SHAPE) == pytest.approx(
+        invocation_cost(0.1, SHAPE))
+
+
+def test_straggler_billed_for_whole_round():
+    """Paper §VI-C: a straggler is charged as if it ran the full round."""
+    round_s = 120.0
+    assert straggler_invocation_cost(round_s, SHAPE) == pytest.approx(
+        invocation_cost(round_s, SHAPE))
+    # strictly worse than the work it actually did
+    assert straggler_invocation_cost(round_s, SHAPE) > invocation_cost(
+        5.0, SHAPE)
+
+
+def test_invocation_cost_components():
+    prices = PriceBook()
+    c = invocation_cost(10.0, SHAPE, prices)
+    expected = (10.0 * 1.0 * prices.vcpu_second
+                + 10.0 * 2.0 * prices.gib_second
+                + prices.per_invocation)
+    assert c == pytest.approx(expected)
+
+
+# ---------------------------------------------------------------- free tier
+def test_free_tier_flag_off_charges_tier1_prices():
+    prices = PriceBook(free_tier=False)
+    # even with an allowance present, free_tier=False ignores it
+    allowance = FreeTierAllowance()
+    c = invocation_cost(10.0, SHAPE, prices, allowance)
+    assert c == pytest.approx(invocation_cost(10.0, SHAPE, PriceBook()))
+    assert allowance.vcpu_seconds == 180_000.0       # untouched
+
+
+def test_free_tier_absorbs_usage_until_exhausted():
+    prices = PriceBook(free_tier=True)
+    allowance = FreeTierAllowance(invocations=2, vcpu_seconds=15.0,
+                                  gib_seconds=30.0)
+    # first call fits fully inside the grant: $0
+    assert invocation_cost(10.0, SHAPE, prices, allowance) == 0.0
+    assert allowance.vcpu_seconds == pytest.approx(5.0)
+    # second call exceeds it: only the overflow is billed
+    c = invocation_cost(10.0, SHAPE, prices, allowance)
+    expected = ((10.0 - 5.0) * prices.vcpu_second
+                + (20.0 - 10.0) * prices.gib_second)  # 2 GiB x 10 s, 10 free
+    assert c == pytest.approx(expected)
+    assert allowance.invocations == 0.0
+    # third call is fully past the grant: full Tier-1 price
+    c3 = invocation_cost(10.0, SHAPE, prices, allowance)
+    assert c3 == pytest.approx(invocation_cost(10.0, SHAPE, PriceBook()))
+
+
+def test_cost_meter_free_tier_vs_raw():
+    free = CostMeter(prices=PriceBook(free_tier=True))
+    raw = CostMeter()
+    for _ in range(5):
+        free.charge(10.0)
+        raw.charge(10.0)
+    assert free.total == 0.0                  # inside the monthly grant
+    assert raw.total > 0.0
+    assert free.invocations == raw.invocations == 5
+
+
+# ---------------------------------------------------------------- attribution
+def test_cost_meter_attributes_by_client_and_round():
+    meter = CostMeter()
+    meter.charge(10.0, client_id="a", round_number=0)
+    meter.charge(20.0, client_id="b", round_number=0)
+    meter.charge_straggler(120.0, client_id="a", round_number=1)
+    assert set(meter.by_client) == {"a", "b"}
+    assert sum(meter.by_client.values()) == pytest.approx(meter.total)
+    assert set(meter.rounds) == {0, 1}
+    assert sum(meter.rounds.values()) == pytest.approx(meter.total)
+    # the straggler whole-round charge dominates a's bill
+    assert meter.by_client["a"] > meter.by_client["b"]
+
+
+def test_cost_meter_unattributed_charges_only_hit_total():
+    meter = CostMeter()
+    meter.charge(10.0)
+    assert meter.total > 0.0
+    assert meter.by_client == {} and meter.rounds == {}
+
+
+# ---------------------------------------------------------------- metrics
+def test_eur_edge_cases():
+    assert effective_update_ratio(0, 0) == 1.0     # empty cohort: no waste
+    assert effective_update_ratio(0, 4) == 0.0
+    assert effective_update_ratio(3, 4) == pytest.approx(0.75)
+
+
+def test_windowed_eur_for_async_mode():
+    assert windowed_update_ratio(0, 0) == 1.0      # idle window: no waste
+    assert windowed_update_ratio(2, 4) == pytest.approx(0.5)
+    # a window can exceed 1.0 when stragglers from earlier windows land
+    assert windowed_update_ratio(3, 2) == pytest.approx(1.5)
+
+
+def test_bias_edge_cases():
+    assert bias({}) == 0
+    assert bias({"a": 3}) == 0
+    assert bias({"a": 5, "b": 1, "c": 3}) == 4
+    np.testing.assert_array_equal(
+        invocation_distribution({"a": 5, "b": 1, "c": 3}),
+        np.array([1, 3, 5]))
+
+
+def test_weighted_accuracy_edge_cases():
+    assert weighted_accuracy([]) == 0.0
+    # zero total cardinality falls back to the plain mean
+    assert weighted_accuracy([(0.2, 0), (0.8, 0)]) == pytest.approx(0.5)
+    # cardinality-weighted otherwise
+    assert weighted_accuracy([(1.0, 30), (0.0, 10)]) == pytest.approx(0.75)
