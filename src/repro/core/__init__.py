@@ -3,8 +3,11 @@ from .aggregation import (ClientUpdate, RunningAggregator, UpdateStore,
                           fedavg_aggregate,
                           fedavg_coefficients, staleness_aggregate,
                           staleness_coefficients)
-from .clustering import ClusteringResult, calinski_harabasz, cluster_clients, dbscan
-from .features import ema, feature_matrix, missed_round_ema, total_ema, training_ema
+from .clustering import (ClusteringResult, calinski_harabasz,
+                         calinski_harabasz_batch, cluster_clients, dbscan,
+                         pairwise_sq_dists)
+from .features import (ema, ema_step, feature_matrix, missed_round_ema,
+                       normalize01, total_ema, training_ema)
 from .history import ClientHistoryDB, ClientRecord
 from .selection import SelectionPlan, select_clients, select_random
 from .strategies import (STRATEGIES, FedAsync, FedAvg, FedBuff, FedLesScan,
@@ -13,8 +16,9 @@ from .strategies import (STRATEGIES, FedAsync, FedAvg, FedBuff, FedLesScan,
 __all__ = [
     "ClientUpdate", "RunningAggregator", "UpdateStore", "fedavg_aggregate", "fedavg_coefficients",
     "staleness_aggregate", "staleness_coefficients", "ClusteringResult",
-    "calinski_harabasz", "cluster_clients", "dbscan", "ema", "feature_matrix",
-    "missed_round_ema", "total_ema", "training_ema", "ClientHistoryDB",
+    "calinski_harabasz", "calinski_harabasz_batch", "cluster_clients",
+    "dbscan", "pairwise_sq_dists", "ema", "ema_step", "feature_matrix",
+    "missed_round_ema", "normalize01", "total_ema", "training_ema", "ClientHistoryDB",
     "ClientRecord", "SelectionPlan", "select_clients", "select_random",
     "STRATEGIES", "FedAsync", "FedAvg", "FedBuff", "FedLesScan", "FedProx",
     "Strategy", "StrategyConfig", "make_strategy",

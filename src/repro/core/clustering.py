@@ -4,9 +4,20 @@ The paper (§V-C) clusters participant clients with DBSCAN on the 2-D
 feature matrix, grid-searches ε to maximise the Calinski–Harabasz index,
 and treats outliers as one extra cluster.  N ≤ a few thousand clients, so
 the O(N²) distance matrix is fine and deterministic.
+
+The ε grid search is the selection hot path (it runs every round for
+every FedLesScan cohort), so `cluster_clients` computes the pairwise
+squared-distance matrix **once** and shares it across the whole grid
+(`dbscan(..., d2=...)`), and scores every candidate labeling with a
+vectorized Calinski–Harabasz (`calinski_harabasz_batch`): the total
+scatter is a constant of the data, so only the between-cluster term is
+computed per labeling, via per-dimension `bincount` group sums — no
+per-cluster Python loop.  `calinski_harabasz` remains the scalar
+reference the batch path is parity-tested against.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
@@ -15,18 +26,28 @@ import numpy as np
 NOISE = -1
 
 
-def dbscan(x: np.ndarray, eps: float, min_samples: int = 2) -> np.ndarray:
+def pairwise_sq_dists(x: np.ndarray) -> np.ndarray:
+    """(N, N) squared euclidean distances.  Uses the same broadcast
+    subtraction as the scalar path (not the Gram-matrix identity) so the
+    shared matrix is bit-identical to a per-call recomputation."""
+    return np.sum((x[:, None, :] - x[None, :, :]) ** 2, axis=-1)
+
+
+def dbscan(x: np.ndarray, eps: float, min_samples: int = 2,
+           d2: Optional[np.ndarray] = None) -> np.ndarray:
     """Classic DBSCAN (Ester et al., 1996). Returns labels, -1 = noise.
 
-    Deterministic: points are visited in index order and BFS expansion uses
-    sorted neighbour lists.
+    Deterministic: points are visited in index order and BFS (FIFO)
+    expansion walks sorted neighbour lists.  `d2` optionally supplies a
+    precomputed squared-distance matrix so an ε grid search pays for it
+    once.
     """
     n = x.shape[0]
     labels = np.full(n, NOISE, dtype=np.int64)
     if n == 0:
         return labels
-    # pairwise euclidean distances
-    d2 = np.sum((x[:, None, :] - x[None, :, :]) ** 2, axis=-1)
+    if d2 is None:
+        d2 = pairwise_sq_dists(x)
     neigh = d2 <= eps * eps  # includes self
     core = neigh.sum(axis=1) >= min_samples
 
@@ -36,9 +57,9 @@ def dbscan(x: np.ndarray, eps: float, min_samples: int = 2) -> np.ndarray:
             continue
         # start a new cluster, expand via BFS over core points
         labels[i] = cluster
-        frontier = [i]
+        frontier = deque([i])
         while frontier:
-            p = frontier.pop()
+            p = frontier.popleft()
             for q in np.nonzero(neigh[p])[0]:
                 if labels[q] == NOISE:
                     labels[q] = cluster
@@ -49,7 +70,8 @@ def dbscan(x: np.ndarray, eps: float, min_samples: int = 2) -> np.ndarray:
 
 
 def calinski_harabasz(x: np.ndarray, labels: np.ndarray) -> float:
-    """Calinski–Harabasz index (variance-ratio criterion).
+    """Calinski–Harabasz index (variance-ratio criterion) — scalar
+    reference implementation.
 
     Ratio of between-cluster to within-cluster dispersion, scaled by
     (N − k)/(k − 1).  Higher is better.  Returns -inf when undefined
@@ -73,6 +95,40 @@ def calinski_harabasz(x: np.ndarray, labels: np.ndarray) -> float:
     return (ssb / ssw) * ((n - k) / (k - 1.0))
 
 
+def calinski_harabasz_batch(x: np.ndarray,
+                            labelings: np.ndarray) -> np.ndarray:
+    """Vectorized CH scores for a batch of labelings (E, N) → (E,).
+
+    Per labeling, the between-cluster dispersion is assembled from
+    `bincount` group sums (vectorized over clusters and dimensions);
+    the within-cluster term falls out of the total-scatter identity
+    ssw = T − ssb, with T computed once for the whole batch.
+    """
+    labelings = np.asarray(labelings)
+    n, dim = x.shape
+    overall = x.mean(axis=0)
+    centered = x - overall
+    total = float(np.sum(centered ** 2))        # T = ssb + ssw, constant
+    scores = np.empty(labelings.shape[0], dtype=np.float64)
+    for e, labels in enumerate(labelings):
+        _, compact = np.unique(labels, return_inverse=True)
+        k = int(compact.max()) + 1 if n else 0
+        if k < 2 or k >= n:
+            scores[e] = float("-inf")
+            continue
+        counts = np.bincount(compact, minlength=k).astype(np.float64)
+        sums = np.stack([np.bincount(compact, weights=centered[:, d],
+                                     minlength=k) for d in range(dim)],
+                        axis=1)                 # (k, dim) centered sums
+        ssb = float(np.sum(sums ** 2 / counts[:, None]))
+        ssw = total - ssb
+        if ssw <= 0.0:
+            scores[e] = float("inf")
+        else:
+            scores[e] = (ssb / ssw) * ((n - k) / (k - 1.0))
+    return scores
+
+
 @dataclass
 class ClusteringResult:
     labels: np.ndarray          # outliers folded into their own cluster id
@@ -94,7 +150,9 @@ def cluster_clients(x: np.ndarray, eps_grid: Optional[Sequence[float]] = None,
     """Grid-search ε for the best Calinski–Harabasz score (paper §V-C).
 
     The ε grid defaults to quantiles of the pairwise-distance distribution,
-    which adapts to the current feature scale without extra passes.
+    which adapts to the current feature scale without extra passes.  One
+    shared distance matrix feeds every DBSCAN run, and all candidate
+    labelings are scored in a single vectorized CH batch.
     """
     n = x.shape[0]
     if n == 0:
@@ -102,23 +160,25 @@ def cluster_clients(x: np.ndarray, eps_grid: Optional[Sequence[float]] = None,
     if n == 1:
         return ClusteringResult(np.zeros(1, np.int64), 0.0, 0.0, 1)
 
+    d2 = pairwise_sq_dists(x)
     if eps_grid is None:
-        d = np.sqrt(np.sum((x[:, None, :] - x[None, :, :]) ** 2, axis=-1))
+        d = np.sqrt(d2)
         pos = d[d > 0]
         if pos.size == 0:  # all identical points → one cluster
             return ClusteringResult(np.zeros(n, np.int64), 0.0, 0.0, 1)
         eps_grid = np.unique(np.quantile(pos, np.linspace(0.05, 0.95, 13)))
 
+    grid = [float(eps) for eps in eps_grid if eps > 0]
+    labelings = [_fold_noise(dbscan(x, eps, min_samples, d2=d2))
+                 for eps in grid]
     best: Optional[ClusteringResult] = None
-    for eps in eps_grid:
-        if eps <= 0:
-            continue
-        labels = _fold_noise(dbscan(x, float(eps), min_samples))
-        score = calinski_harabasz(x, labels)
-        k = len(np.unique(labels))
-        cand = ClusteringResult(labels, float(eps), score, k)
-        if best is None or cand.score > best.score:
-            best = cand
+    if labelings:
+        scores = calinski_harabasz_batch(x, np.stack(labelings))
+        for eps, labels, score in zip(grid, labelings, scores):
+            cand = ClusteringResult(labels, eps, float(score),
+                                    len(np.unique(labels)))
+            if best is None or cand.score > best.score:
+                best = cand
     if best is None or best.n_clusters < 2 or not np.isfinite(best.score):
         # degenerate data (e.g. all behaviourally identical) → one cluster
         labels = np.zeros(n, np.int64)

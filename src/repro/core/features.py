@@ -16,6 +16,30 @@ import numpy as np
 from .history import ClientRecord
 
 
+def ema_step(previous: "float | None", value: float,
+             alpha: float = 0.5) -> float:
+    """One EMA update: `alpha` on the new observation, seeded by the
+    first value (matching `ema` over the full sequence)."""
+    if previous is None:
+        return float(value)
+    return alpha * float(value) + (1.0 - alpha) * float(previous)
+
+
+def normalize01(values: np.ndarray, mask: "np.ndarray | None" = None
+                ) -> np.ndarray:
+    """Min-max normalise to [0, 1] over the entries selected by `mask`
+    (all by default); constant input maps to 0.0, unselected entries to
+    the midpoint 0.5 (a neutral prior for clients without data)."""
+    values = np.asarray(values, dtype=np.float64)
+    out = np.full(values.shape, 0.5, dtype=np.float64)
+    sel = np.ones(values.shape, bool) if mask is None else np.asarray(mask)
+    if not np.any(sel):
+        return out
+    lo, hi = float(values[sel].min()), float(values[sel].max())
+    out[sel] = 0.0 if hi <= lo else (values[sel] - lo) / (hi - lo)
+    return out
+
+
 def ema(values: Sequence[float], alpha: float = 0.5) -> float:
     """Exponential moving average, most-recent-last.
 

@@ -146,18 +146,26 @@ class ClientHistoryDB:
         return rookies, participants, stragglers
 
     # ---- persistence -------------------------------------------------------
-    def save(self, path: Optional[str] = None) -> None:
-        p = Path(path) if path else self._path
-        if p is None:
-            raise ValueError("no persistence path configured")
+    def to_payload(self) -> dict:
+        """JSON-ready snapshot of every record (the checkpoint surface:
+        fl/checkpointing.py embeds it in the round-tagged driver state)."""
         with self._lock:
-            payload = {cid: rec.to_dict() for cid, rec in self._records.items()}
-        p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(json.dumps(payload))
+            return {cid: rec.to_dict() for cid, rec in self._records.items()}
 
-    def load(self, path) -> None:
-        payload = json.loads(Path(path).read_text())
+    def load_payload(self, payload: dict) -> None:
+        """Restore from a `to_payload()` snapshot, replacing all records."""
         with self._lock:
             self._records = {
                 cid: ClientRecord.from_dict(d) for cid, d in payload.items()
             }
+
+    def save(self, path: Optional[str] = None) -> None:
+        p = Path(path) if path else self._path
+        if p is None:
+            raise ValueError("no persistence path configured")
+        payload = self.to_payload()
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(payload))
+
+    def load(self, path) -> None:
+        self.load_payload(json.loads(Path(path).read_text()))

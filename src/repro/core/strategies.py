@@ -1,8 +1,10 @@
 """Training strategies: FedAvg, FedProx, FedLesScan, SAFA, FedAsync, FedBuff.
 
-A Strategy owns (a) client selection for a round (or the initial cohort
-in barrier-free mode), (b) the aggregation scheme, and (c) an optional
-client-side loss hook (FedProx's proximal term).  The training driver
+A Strategy owns (a) a `Scheduler` (fl/scheduler.py) that makes its
+client-picking decisions — `Strategy.select` is a compatibility shim
+delegating to it, and the training driver consumes the scheduler
+directly — (b) the aggregation scheme, and (c) an optional client-side
+loss hook (FedProx's proximal term).  The training driver
 (fl/controller.py) is strategy-agnostic — this is the paper's `Strategy
 Manager` component (§IV-A).
 
@@ -25,7 +27,7 @@ import numpy as np
 from .aggregation import (ClientUpdate, UpdateStore, aggregate,
                           fedavg_aggregate, staleness_aggregate)
 from .history import ClientHistoryDB
-from .selection import SelectionPlan, select_clients, select_random
+from .selection import SelectionPlan
 
 Pytree = Any
 
@@ -62,10 +64,24 @@ class Strategy:
         self.update_store = UpdateStore(tau=config.tau)
         self.last_plan: Optional[SelectionPlan] = None
         self.last_aggregate_count = 0   # updates actually merged last round
+        # every strategy owns a Scheduler (fl/scheduler.py): the training
+        # driver consumes it directly, and `select` delegates to it so
+        # pre-scheduler call sites keep their exact behaviour (the
+        # scheduler shares `self.rng`, preserving the sampling stream)
+        self.scheduler = self._default_scheduler()
 
     # ---- selection ------------------------------------------------------
+    def _default_scheduler(self):
+        # local import: core must stay importable before repro.fl loads
+        from ..fl.scheduler import RandomScheduler
+        return RandomScheduler(self.config.clients_per_round, rng=self.rng)
+
     def select(self, client_ids: Sequence[str], round_number: int) -> List[str]:
-        raise NotImplementedError
+        """Compatibility shim: delegate to the strategy's scheduler."""
+        want = self.scheduler.cohort_size(round_number, ())
+        selected = self.scheduler.propose(client_ids, want, 0.0, round_number)
+        self.last_plan = getattr(self.scheduler, "last_plan", None)
+        return selected
 
     # ---- event hooks (controller is an event consumer) ------------------
     def on_client_finish(self, update: Optional[ClientUpdate],
@@ -138,14 +154,11 @@ class Strategy:
 
 
 class FedAvg(Strategy):
-    """McMahan et al. — random selection + cardinality-weighted averaging.
-    Synchronous: late updates are discarded."""
+    """McMahan et al. — random selection (RandomScheduler) +
+    cardinality-weighted averaging.  Synchronous: late updates are
+    discarded."""
 
     name = "fedavg"
-
-    def select(self, client_ids, round_number):
-        return select_random(client_ids, self.config.clients_per_round,
-                             self.rng)
 
 
 class FedProx(FedAvg):
@@ -167,13 +180,12 @@ class FedLesScan(Strategy):
     uses_history = True
     semi_async = True
 
-    def select(self, client_ids, round_number):
-        plan = select_clients(
-            self.history, client_ids, round_number,
-            self.config.max_rounds, self.config.clients_per_round, self.rng,
-            ema_alpha=self.config.ema_alpha)
-        self.last_plan = plan
-        return plan.selected
+    def _default_scheduler(self):
+        from ..fl.scheduler import FedLesScanScheduler
+        return FedLesScanScheduler(
+            self.config.clients_per_round, self.history,
+            max_rounds=self.config.max_rounds,
+            ema_alpha=self.config.ema_alpha, rng=self.rng)
 
     def aggregate(self, updates, round_number, now=None):
         # include late updates from previous rounds that have ARRIVED by
@@ -197,8 +209,9 @@ class SAFA(Strategy):
     def quorum(self) -> int:
         return self.config.clients_per_round
 
-    def select(self, client_ids, round_number):
-        return list(client_ids)
+    def _default_scheduler(self):
+        from ..fl.scheduler import FullPoolScheduler
+        return FullPoolScheduler(self.config.clients_per_round, rng=self.rng)
 
     def aggregate(self, updates, round_number, now=None):
         return self._staleness_merge(updates, round_number, now)
@@ -222,10 +235,6 @@ class FedAsync(Strategy):
 
     name = "fedasync"
     barrier_free = True
-
-    def select(self, client_ids, round_number):
-        return select_random(client_ids, self.config.clients_per_round,
-                             self.rng)
 
     def on_client_finish(self, update, arrival_time, producing_round,
                          current_round, global_params=None):
@@ -257,10 +266,6 @@ class FedBuff(Strategy):
                  seed: int = 0):
         super().__init__(config, history, seed=seed)
         self._buffer: List[Tuple[int, ClientUpdate]] = []  # (staleness base)
-
-    def select(self, client_ids, round_number):
-        return select_random(client_ids, self.config.clients_per_round,
-                             self.rng)
 
     def _flush(self, global_params: Pytree,
                current_round: int) -> Pytree:

@@ -240,6 +240,26 @@ class SimulatedFaaSPlatform:
             self.recorder.on_plan(self.name, plan, attempt)
         return plan
 
+    # ---- checkpoint surface (fl/checkpointing.py) --------------------
+    def state_dict(self) -> dict:
+        """JSON-ready snapshot of the platform's mutable state (RNG
+        stream, warm pool, counters).  The virtual clock is owned by the
+        training driver's snapshot — it is shared with the event queue."""
+        return {
+            "rng": self.rng.bit_generator.state,
+            "warm": {cid: [inst.speed_factor, inst.warm_until]
+                     for cid, inst in self._warm.items()},
+            "cold_starts": self.cold_starts,
+            "invocations": self.invocations,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.rng.bit_generator.state = state["rng"]
+        self._warm = {cid: WarmInstance(speed_factor=sf, warm_until=until)
+                      for cid, (sf, until) in state.get("warm", {}).items()}
+        self.cold_starts = int(state.get("cold_starts", 0))
+        self.invocations = int(state.get("invocations", 0))
+
     def expire_warm(self, client_id: str, now: float) -> bool:
         """Event-driven scale-to-zero: evict iff the lease truly lapsed.
 

@@ -5,7 +5,8 @@ into: the platform reports sampled invocation plans (cold starts), the
 invocation engine reports one record per resolved invocation *attempt*
 (cold start, retry index, billed duration, arrival virtual time, routing
 decision), the cost meter reports every billed charge, and the training
-driver reports every aggregation event.  Records are plain dicts dumped
+driver reports every aggregation event and every scheduler cohort
+decision (``scheduling`` records).  Records are plain dicts dumped
 as JSONL, so a full experiment round-trips: summing the ``billing``
 records reconstructs ``CostMeter.total`` exactly, and the attempt stream
 replays the schedule the event queue produced.
@@ -36,6 +37,7 @@ REC_BILLING = "billing"
 REC_AGGREGATION = "aggregation"
 REC_ROUTE = "route"
 REC_EVENT = "event"
+REC_SCHEDULING = "scheduling"
 
 
 class TraceRecorder:
@@ -101,6 +103,21 @@ class TraceRecorder:
             "type": REC_AGGREGATION, "time": time, "round": round_number,
             "merged": merged, "strategy": strategy, "mode": mode,
         })
+
+    def scheduling(self, *, time: float, round_number, scheduler: str,
+                   mode: str, want: int, selected, pool_size: int,
+                   **extra) -> None:
+        """One Scheduler.propose() decision (fl/scheduler.py): a round
+        cohort in barrier modes, a slot refill in barrier-free mode.
+        `extra` carries scheduler-specific payload (tier counts for
+        fedlesscan, score stats for apodotiko, cohort for adaptive)."""
+        rec = {
+            "type": REC_SCHEDULING, "time": time, "round": round_number,
+            "scheduler": scheduler, "mode": mode, "want": want,
+            "selected": list(selected), "pool_size": pool_size,
+        }
+        rec.update(extra)
+        self.records.append(rec)
 
     def route(self, client_id: str, platform: str, reason: str) -> None:
         """A routing decision (fresh assignment or telemetry re-route)."""

@@ -1,0 +1,94 @@
+"""Round-tagged checkpoint/resume of the training driver.
+
+A checkpoint for round *r* (meaning: rounds ``0..r-1`` are done, round
+*r* runs next) is two files in one directory::
+
+    round_000004.npz    global model params (checkpoint/checkpoint.py)
+    round_000004.json   driver state (TrainingDriver.checkpoint_state():
+                        history payload, RNG streams, scheduler state,
+                        cost tallies, virtual clock, trailing RoundStats)
+
+Resume rebuilds the experiment wiring from the same config/seed, then
+`RoundCheckpointer.restore` loads the params and replays the state into
+the fresh driver — the remaining rounds then reproduce an uninterrupted
+run exactly, provided no invocation was in flight across the checkpoint
+boundary (a straggler still running at the boundary loses its future
+arrival; everything billed before the boundary is preserved).  Surface:
+``ExperimentConfig.checkpoint_dir``/``checkpoint_every`` to write,
+``ExperimentConfig.resume_from`` to resume.
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Any, List, Optional, Tuple
+
+from ..checkpoint.checkpoint import load_pytree, save_pytree
+
+Pytree = Any
+
+
+class RoundCheckpointer:
+    """Writes/restores round-tagged driver checkpoints with retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # ---- write --------------------------------------------------------
+    def save(self, driver, params: Pytree, next_round: int) -> Path:
+        """Snapshot `driver` + `params` as the checkpoint for
+        `next_round` (the first round a resumed run will execute)."""
+        state = driver.checkpoint_state()
+        state["next_round"] = int(next_round)
+        save_pytree(params, str(self._params_path(next_round)))
+        self._state_path(next_round).write_text(json.dumps(state))
+        self._gc()
+        return self._state_path(next_round)
+
+    # ---- read ---------------------------------------------------------
+    def rounds(self) -> List[int]:
+        out = []
+        for f in self.dir.glob("round_*.json"):
+            m = re.match(r"round_(\d+)\.json$", f.name)
+            if m and self._params_path(int(m.group(1))).exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_round(self) -> Optional[int]:
+        rounds = self.rounds()
+        return rounds[-1] if rounds else None
+
+    def restore(self, driver, like_params: Pytree,
+                round_number: Optional[int] = None) -> Tuple[Pytree, int]:
+        """Load the checkpoint (latest by default) into `driver` and
+        return ``(params, next_round)``."""
+        rnd = round_number if round_number is not None else self.latest_round()
+        if rnd is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        state = json.loads(self._state_path(rnd).read_text())
+        for field, have in (("strategy", driver.strategy.name),
+                            ("scheduler_name", driver.scheduler.name),
+                            ("mode", driver.mode)):
+            want = state.get(field)
+            if want is not None and want != have:
+                raise ValueError(
+                    f"checkpoint was written with {field}={want!r}, "
+                    f"driver runs {have!r}")
+        params = load_pytree(str(self._params_path(rnd)), like_params)
+        driver.restore_state(state)
+        return params, int(state["next_round"])
+
+    # ---- internals ----------------------------------------------------
+    def _params_path(self, rnd: int) -> Path:
+        return self.dir / f"round_{rnd:06d}.npz"
+
+    def _state_path(self, rnd: int) -> Path:
+        return self.dir / f"round_{rnd:06d}.json"
+
+    def _gc(self) -> None:
+        for rnd in self.rounds()[:-self.keep]:
+            self._params_path(rnd).unlink(missing_ok=True)
+            self._state_path(rnd).unlink(missing_ok=True)

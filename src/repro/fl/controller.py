@@ -22,14 +22,22 @@ single event loop over the shared `EventQueue`:
   current global model — barrier-free strategies (FedAsync, FedBuff)
   return a *new* global model from the hook and the driver versions it
   continuously.  Each invocation is its own engine ticket with its own
-  crash-detection deadline; clients that keep failing are backed off
-  exponentially (in virtual time) before re-entering the rotation, and
-  a slow client past its ticket deadline keeps running — its stale
-  update merges on arrival with a staleness-damped weight while a
-  replacement keeps throughput up.  `RoundStats` entries are emitted
-  per *aggregation event*, with EUR computed over the window between
-  events (updates delivered / invocations resolved —
-  `metrics.windowed_update_ratio`).
+  crash-detection deadline; a slow client past its ticket deadline
+  keeps running — its stale update merges on arrival with a
+  staleness-damped weight while a replacement keeps throughput up.
+  `RoundStats` entries are emitted per *aggregation event*, with EUR
+  computed over the window between events (updates delivered /
+  invocations resolved — `metrics.windowed_update_ratio`).
+
+Every client-picking decision — sync round cohorts, semi-async refills,
+and the async slot rotation with its exponential failure backoff —
+lives in the `Scheduler` subsystem (fl/scheduler.py): the driver asks
+``scheduler.cohort_size`` how many to invoke, ``scheduler.propose`` whom,
+and reports every completion/miss back through ``notify_finish`` /
+``notify_miss``.  Each propose is exported as a ``scheduling`` record in
+the JSONL trace.  By default the barrier modes use the strategy's own
+scheduler (the `Strategy.select` shim's engine) and the async mode a
+`RotationScheduler`; pass `scheduler=` to race any policy in any mode.
 
 `Controller` remains as a thin alias and `run_round`/`run` keep their
 original signatures, so existing experiments, benchmarks and tests run
@@ -38,8 +46,7 @@ unmodified on the new driver.
 from __future__ import annotations
 
 import itertools
-from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -52,6 +59,8 @@ from ..faas.invoker import ClientCompletion, InvocationEngine, MockInvoker
 from .client import ClientPool
 from .metrics import (bias, effective_update_ratio, weighted_accuracy,
                       windowed_update_ratio)
+from .scheduler import (RotationScheduler, Scheduler,
+                        StrategySelectScheduler)
 
 Pytree = Any
 
@@ -143,7 +152,8 @@ class TrainingDriver:
                  seed: int = 0, max_retries: int = 1,
                  max_concurrency: Optional[int] = None,
                  vectorized: bool = False,
-                 mode: Optional[str] = None, trace=None):
+                 mode: Optional[str] = None, trace=None,
+                 scheduler: Optional[Scheduler] = None):
         self.strategy = strategy
         self.invoker = invoker
         self.pool = pool
@@ -166,6 +176,23 @@ class TrainingDriver:
                 f"mode needs a barrier-free strategy (fedasync, fedbuff)")
         self.mode = mode
         self.trace = trace
+        # all cohort decisions route through one Scheduler: the strategy's
+        # own (via the Strategy.select shim's engine) in barrier modes,
+        # the deterministic rotation in barrier-free mode — or any policy
+        # injected by the caller
+        if scheduler is not None:
+            self.scheduler = scheduler
+        elif self.mode == "async":
+            self.scheduler = RotationScheduler(
+                strategy.config.clients_per_round, pool.client_ids,
+                timeout_s=round_timeout_s, seed=seed)
+        elif type(strategy).select is not Strategy.select:
+            # legacy subclass with a hand-written select override: its
+            # policy keeps winning over the default scheduler
+            self.scheduler = StrategySelectScheduler(strategy)
+        else:
+            self.scheduler = strategy.scheduler
+        self._recent_stats: List[RoundStats] = []   # cohort_size telemetry
         # one event queue on the platform's clock, shared across rounds —
         # straggler events survive round boundaries
         self.queue = EventQueue(self.platform.clock, recorder=trace)
@@ -207,6 +234,16 @@ class TrainingDriver:
                                    strategy=self.strategy.name,
                                    mode=self.mode)
 
+    def _record_scheduling(self, time: float, round_number: int, want: int,
+                           selected: List[str], pool_size: int) -> None:
+        if self.trace is not None:
+            self.trace.scheduling(time=time, round_number=round_number,
+                                  scheduler=self.scheduler.name,
+                                  mode=self.mode, want=want,
+                                  selected=list(selected),
+                                  pool_size=pool_size,
+                                  **self.scheduler.decision_info())
+
     # ------------------------------------------------------------------
     # barrier path (sync / semi-async)
     # ------------------------------------------------------------------
@@ -236,6 +273,9 @@ class TrainingDriver:
         out = completion.outcome
         self.history.client_report(out.client_id, completion.round_number,
                                    out.duration_s)
+        self.scheduler.notify_finish(out.client_id, arrival_time,
+                                     duration_s=out.duration_s,
+                                     cold=out.cold, late=True)
         self.strategy.on_client_finish(
             completion.update, arrival_time=arrival_time,
             producing_round=completion.round_number,
@@ -260,7 +300,15 @@ class TrainingDriver:
         t0 = clock.now
         deadline = t0 + self.round_timeout_s
 
-        selected = self.strategy.select(self.pool.client_ids, round_number)
+        # the Scheduler owns the cohort decision: how many (adaptive
+        # sizing over trailing RoundStats) and whom
+        want = self.scheduler.cohort_size(round_number, self._recent_stats)
+        selected = self.scheduler.propose(self.pool.client_ids, want, t0,
+                                          round_number)
+        self.strategy.last_plan = getattr(self.scheduler, "last_plan",
+                                          self.strategy.last_plan)
+        self._record_scheduling(t0, round_number, want, selected,
+                                len(self.pool.client_ids))
         precomputed = self._precompute_updates(selected, global_params,
                                                round_number)
         self.engine.open_round(self.queue, selected, global_params,
@@ -337,6 +385,9 @@ class TrainingDriver:
             # client-side report (Alg. 1 lines 16-27) — in-time client
             self.history.client_report(out.client_id, round_number,
                                        out.duration_s)
+            self.scheduler.notify_finish(out.client_id, close_time,
+                                         duration_s=out.duration_s,
+                                         cold=out.cold)
             round_cost += self.cost.charge(out.duration_s,
                                            client_id=out.client_id,
                                            round_number=round_number)
@@ -344,20 +395,24 @@ class TrainingDriver:
             # alive but past the deadline: a miss now; its report and its
             # update arrive with its CLIENT_FINISH event in a later round
             self.history.mark_miss(cid, round_number)
+            self.scheduler.notify_miss(cid, close_time, crashed=False)
             round_cost += self.cost.charge_straggler(duration, client_id=cid,
                                                      round_number=round_number)
         for comp in failed:
             self.history.mark_miss(comp.outcome.client_id, round_number)
+            self.scheduler.notify_miss(comp.outcome.client_id, close_time)
             round_cost += self.cost.charge_straggler(
                 duration, client_id=comp.outcome.client_id,
                 round_number=round_number)
         for cid in dead_ids:
             self.history.mark_miss(cid, round_number)
+            self.scheduler.notify_miss(cid, close_time)
             round_cost += self.cost.charge_straggler(duration, client_id=cid,
                                                      round_number=round_number)
         for cid in unstarted:
             # never invoked (concurrency cap): a miss, but nothing billed
             self.history.mark_miss(cid, round_number)
+            self.scheduler.notify_miss(cid, close_time, crashed=False)
 
         # --- aggregation runs at round close (virtual now) --------------
         self.strategy.on_round_close(round_number, now=close_time)
@@ -381,6 +436,9 @@ class TrainingDriver:
             aggregated_updates=self.strategy.last_aggregate_count,
             retries=retries,
             straggler_arrivals=straggler_arrivals)
+        # trailing telemetry window for Scheduler.cohort_size
+        self._recent_stats.append(stats)
+        del self._recent_stats[:-16]
         return new_params, stats
 
     # ------------------------------------------------------------------
@@ -405,9 +463,6 @@ class TrainingDriver:
         next_eval = self.eval_every * cohort_size if self.eval_every else 0
         tickets: Dict[int, _AsyncTicket] = {}
         in_flight: set = set()
-        fail_streak: Dict[str, int] = {}
-        cooldown_until: Dict[str, float] = {}
-        rotation = deque(self.pool.client_ids)
 
         window = self._fresh_window(clock.now)
 
@@ -433,33 +488,20 @@ class TrainingDriver:
             in_flight.add(cid)
             window["issued"].append(cid)
 
-        def next_client(now: float) -> Optional[str]:
-            """Deterministic cyclic rotation over the whole population,
-            skipping in-flight clients and those in failure backoff; if
-            everyone eligible is cooling down, probe the first one."""
-            fallback = None
-            for _ in range(len(rotation)):
-                cid = rotation[0]
-                rotation.rotate(-1)
-                if cid in in_flight:
-                    continue
-                if cooldown_until.get(cid, 0.0) <= now:
-                    return cid
-                if fallback is None:
-                    fallback = cid
-            return fallback
+        def propose(want: int, now: float) -> List[str]:
+            """Ask the Scheduler for the next slot fill(s): the eligible
+            pool excludes in-flight clients; rotation order, failure
+            backoff, and any scoring live inside the scheduler."""
+            eligible = [cid for cid in self.pool.client_ids
+                        if cid not in in_flight]
+            picks = self.scheduler.propose(eligible, want, now, version)
+            self._record_scheduling(now, version, want, picks,
+                                    len(eligible))
+            return picks
 
         def refill(now: float) -> None:
-            cid = next_client(now)
-            if cid is not None:
+            for cid in propose(1, now):
                 issue(cid, now)
-
-        def penalize(cid: str, now: float) -> None:
-            """Exponential (virtual-time) backoff for failing clients —
-            the async twin of the paper's Eq. 1 cooldown."""
-            fail_streak[cid] = fail_streak.get(cid, 0) + 1
-            cooldown_until[cid] = now + (self.round_timeout_s
-                                         * 2.0 ** (fail_streak[cid] - 1))
 
         def close_window(now: float, merged: int,
                          aggregated: bool = True) -> None:
@@ -502,7 +544,7 @@ class TrainingDriver:
         slots = cohort_size
         if self.engine.max_concurrency is not None:
             slots = min(slots, self.engine.max_concurrency)
-        for cid in self.strategy.select(self.pool.client_ids, 0)[:slots]:
+        for cid in propose(slots, clock.now):
             issue(cid, clock.now)
 
         while delivered_total < target:
@@ -532,7 +574,7 @@ class TrainingDriver:
                     self.cost.charge_straggler(self.round_timeout_s,
                                                client_id=cid,
                                                round_number=version)
-                    penalize(cid, ev.time)
+                    self.scheduler.notify_miss(cid, ev.time)
                     window["crashed"].append(cid)
                     refill(ev.time)
                 for cid in late:
@@ -541,6 +583,7 @@ class TrainingDriver:
                     # slot so throughput holds
                     info.replaced = True
                     self.history.mark_miss(cid, info.version)
+                    self.scheduler.notify_miss(cid, ev.time, crashed=False)
                     window["late"].append(cid)
                     refill(ev.time)
                 continue
@@ -571,7 +614,7 @@ class TrainingDriver:
                                            client_id=cid,
                                            round_number=version)
                 self.history.mark_miss(cid, info.version)
-                penalize(cid, ev.time)
+                self.scheduler.notify_miss(cid, ev.time)
                 window["crashed"].append(cid)
                 if not info.replaced:
                     refill(ev.time)
@@ -587,8 +630,11 @@ class TrainingDriver:
                 refill(ev.time)             # issue lands in this window
             else:
                 window["straggler_arrivals"].append(cid)
-            fail_streak[cid] = 0
-            cooldown_until.pop(cid, None)
+            # an arrived update clears the client's failure backoff
+            self.scheduler.notify_finish(cid, ev.time,
+                                         duration_s=out.duration_s,
+                                         cold=out.cold,
+                                         late=info.replaced)
 
             delivered_total += 1
             window["delivered"].append(cid)
@@ -638,13 +684,85 @@ class TrainingDriver:
                 "cost0": self.cost.total}
 
     # ------------------------------------------------------------------
-    def run(self, global_params: Pytree, n_rounds: int,
-            verbose: bool = False) -> tuple:
+    # checkpoint surface (fl/checkpointing.py)
+    # ------------------------------------------------------------------
+    def checkpoint_state(self) -> dict:
+        """Round-boundary snapshot of the driver's mutable state: history,
+        every RNG stream (driver, strategy, platform), scheduler state,
+        cost-meter tallies, the virtual clock, and the trailing RoundStats
+        telemetry.  Together with the round-tagged global params this is
+        enough for a resumed run to replay the remaining rounds exactly —
+        as long as no invocation spans the checkpoint boundary (an
+        in-flight straggler's future arrival is dropped on restore; its
+        billing up to the boundary was already recorded).  The barrier-free
+        mode has no round boundaries to snapshot at and is not supported.
+        """
         if self.mode == "async":
+            raise NotImplementedError(
+                "checkpoint/resume covers the barrier modes; the async "
+                "driver has no round boundary to snapshot at")
+        state = {
+            "mode": self.mode,
+            "strategy": self.strategy.name,
+            "scheduler_name": self.scheduler.name,
+            "clock": self.queue.clock.now,
+            "history": self.history.to_payload(),
+            "driver_rng": self.rng.bit_generator.state,
+            "strategy_rng": self.strategy.rng.bit_generator.state,
+            "scheduler": self.scheduler.state_dict(),
+            "cost": {"total": self.cost.total,
+                     "invocations": self.cost.invocations,
+                     "by_client": dict(self.cost.by_client),
+                     "rounds": {str(k): v
+                                for k, v in self.cost.rounds.items()}},
+            "recent_stats": [asdict(r) for r in self._recent_stats],
+        }
+        if self.cost.allowance is not None:
+            # free-tier billing: the remaining monthly grant is part of
+            # the cost state (a resumed run must not re-grant it)
+            a = self.cost.allowance
+            state["cost"]["allowance"] = {
+                "invocations": a.invocations,
+                "vcpu_seconds": a.vcpu_seconds,
+                "gib_seconds": a.gib_seconds,
+            }
+        if hasattr(self.platform, "state_dict"):
+            state["platform"] = self.platform.state_dict()
+        return state
+
+    def restore_state(self, state: dict) -> None:
+        """Inverse of `checkpoint_state` (same driver wiring assumed)."""
+        self.queue.clock.advance_to(float(state["clock"]))
+        self.history.load_payload(state["history"])
+        self.rng.bit_generator.state = state["driver_rng"]
+        self.strategy.rng.bit_generator.state = state["strategy_rng"]
+        self.scheduler.load_state_dict(state.get("scheduler", {}))
+        cost = state.get("cost", {})
+        self.cost.total = float(cost.get("total", 0.0))
+        self.cost.invocations = int(cost.get("invocations", 0))
+        self.cost.by_client = dict(cost.get("by_client", {}))
+        self.cost.rounds = {int(k): v
+                            for k, v in cost.get("rounds", {}).items()}
+        if "allowance" in cost and self.cost.allowance is not None:
+            for attr, left in cost["allowance"].items():
+                setattr(self.cost.allowance, attr, float(left))
+        self._recent_stats = [RoundStats(**d)
+                              for d in state.get("recent_stats", [])]
+        if "platform" in state and hasattr(self.platform, "load_state_dict"):
+            self.platform.load_state_dict(state["platform"])
+
+    # ------------------------------------------------------------------
+    def run(self, global_params: Pytree, n_rounds: int,
+            verbose: bool = False, start_round: int = 0,
+            checkpointer=None, checkpoint_every: int = 0) -> tuple:
+        if self.mode == "async":
+            if start_round or checkpointer is not None:
+                raise ValueError("checkpoint/resume is a barrier-mode "
+                                 "feature (async runs are continuous)")
             return self._run_async(global_params, n_rounds, verbose=verbose)
         result = ExperimentResult(strategy=self.strategy.name, mode=self.mode)
         params = global_params
-        for rnd in range(n_rounds):
+        for rnd in range(start_round, n_rounds):
             params, stats = self.run_round(params, rnd)
             if self.eval_every and (rnd + 1) % self.eval_every == 0:
                 stats.accuracy = self._evaluate(params)
@@ -652,6 +770,9 @@ class TrainingDriver:
             result.rounds.append(stats)
             if verbose:
                 self._print_progress("round", stats)
+            if (checkpointer is not None and checkpoint_every
+                    and (rnd + 1) % checkpoint_every == 0):
+                checkpointer.save(self, params, rnd + 1)
         result.final_accuracy = self._evaluate(params)
         result.cost_by_client = dict(self.cost.by_client)
         result.cost_by_round = dict(self.cost.rounds)

@@ -63,6 +63,18 @@ class ExperimentConfig:
     # (fedasync, fedbuff), semi-async/sync otherwise
     mode: Optional[str] = None
     trace_path: Optional[str] = None  # export the JSONL trace here
+    # scheduling surface (fl/scheduler.py): None → the strategy's own
+    # scheduler (barrier modes) / the rotation (async); a name from
+    # make_scheduler ("random", "fedlesscan", "apodotiko", "adaptive",
+    # "rotation") overrides the cohort policy in any mode
+    scheduler: Optional[str] = None
+    # checkpoint/resume surface (fl/checkpointing.py, barrier modes):
+    # write a round-tagged checkpoint every `checkpoint_every` rounds to
+    # `checkpoint_dir`; `resume_from` restores the latest checkpoint in
+    # a directory and runs only the remaining rounds
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    resume_from: Optional[str] = None
     # barrier-free strategy knobs (core/strategies.StrategyConfig)
     buffer_k: int = 4
     async_alpha: float = 0.6
@@ -131,17 +143,40 @@ def run_experiment(task: ClassificationTask,
         import jax
         vectorized = jax.default_backend() != "cpu"
 
+    scheduler = None
+    if config.scheduler is not None:
+        from .scheduler import make_scheduler
+        scheduler = make_scheduler(
+            config.scheduler, config.clients_per_round, history=history,
+            max_rounds=config.n_rounds, ema_alpha=strat_cfg.ema_alpha,
+            client_ids=pool.client_ids,
+            timeout_s=config.scenario.round_timeout_s, seed=config.seed)
+
     controller = Controller(
         strategy, invoker, pool, history, CostMeter(trace=recorder),
         round_timeout_s=config.scenario.round_timeout_s,
         eval_every=config.eval_every, seed=config.seed,
         max_retries=config.max_retries,
         max_concurrency=config.max_concurrency,
-        vectorized=vectorized, mode=config.mode, trace=recorder)
+        vectorized=vectorized, mode=config.mode, trace=recorder,
+        scheduler=scheduler)
 
     params = (initial_params if initial_params is not None
               else task.init_params(config.seed))
-    _, result = controller.run(params, config.n_rounds, verbose=verbose)
+
+    start_round, checkpointer = 0, None
+    if config.checkpoint_dir or config.resume_from:
+        from .checkpointing import RoundCheckpointer
+    if config.resume_from:
+        params, start_round = RoundCheckpointer(
+            config.resume_from).restore(controller, params)
+    if config.checkpoint_dir:
+        checkpointer = RoundCheckpointer(config.checkpoint_dir)
+
+    _, result = controller.run(params, config.n_rounds, verbose=verbose,
+                               start_round=start_round,
+                               checkpointer=checkpointer,
+                               checkpoint_every=config.checkpoint_every)
     if recorder is not None:
         recorder.to_jsonl(config.trace_path)
     return result

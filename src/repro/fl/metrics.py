@@ -31,6 +31,39 @@ def windowed_update_ratio(n_merged: int, n_resolved: int) -> float:
     return effective_update_ratio(n_merged, n_resolved)
 
 
+def trailing_eur(stats: Sequence, window: int = 3) -> float:
+    """Mean EUR over the trailing `window` RoundStats — the adaptive
+    scheduler's grow/shrink signal."""
+    recent = list(stats)[-window:]
+    if not recent:
+        return 1.0
+    return float(np.mean([r.eur for r in recent]))
+
+
+def trailing_straggler_ratio(stats: Sequence, window: int = 3) -> float:
+    """Fraction of selected clients that were late or crashed over the
+    trailing `window` RoundStats."""
+    recent = list(stats)[-window:]
+    selected = sum(len(r.selected) for r in recent)
+    if not selected:
+        return 0.0
+    wasted = sum(len(r.late) + len(r.crashed) for r in recent)
+    return wasted / selected
+
+
+def time_to_accuracy(accuracy_curve: Sequence[tuple],
+                     round_durations: Sequence[float],
+                     target: float) -> float:
+    """Virtual seconds until the evaluated accuracy first reaches
+    `target` (inf if it never does).  `accuracy_curve` is the
+    ExperimentResult's [(round, accuracy), ...] and `round_durations`
+    the per-round duration list."""
+    for rnd, acc in accuracy_curve:
+        if acc >= target:
+            return float(sum(round_durations[:rnd + 1]))
+    return float("inf")
+
+
 def bias(invocations: Dict[str, int]) -> int:
     if not invocations:
         return 0

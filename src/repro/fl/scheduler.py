@@ -1,0 +1,480 @@
+"""Unified client-scheduling subsystem — every cohort decision in one place.
+
+Before this module, client picking was smeared across three layers:
+per-strategy ``Strategy.select`` overrides, Algorithm 2 in
+``core/selection.py``, and the async rotation + failure backoff
+hard-coded in the training driver.  A `Scheduler` now owns *all* of it,
+and the `TrainingDriver` consumes one uniform surface in every mode:
+
+* ``propose(pool, want, now, round_number)`` — pick the next cohort
+  (sync round cohorts, semi-async refills, and single-slot async
+  rotation refills all go through this call);
+* ``notify_finish`` / ``notify_miss`` — the driver's feedback channel:
+  every observed completion, miss, or crash is reported back so
+  behaviour-aware schedulers can adapt;
+* ``cohort_size(round_number, telemetry)`` — how many clients the next
+  round should invoke, given trailing `RoundStats` telemetry (the
+  adaptive-sizing hook).
+
+Shipped policies (``make_scheduler``):
+
+``random``      uniform sampling (FedAvg/FedProx behaviour);
+``fedlesscan``  the paper's Algorithm 2 tier selection (rookies →
+                DBSCAN-clustered participants → stragglers), wrapping
+                ``core.selection.select_clients``;
+``apodotiko``   score-based probabilistic sampling (arXiv 2404.14033):
+                a per-client score combining duration EMA, success
+                rate, cold-start rate, and selection staleness feeds a
+                softmax whose temperature anneals over rounds —
+                explore early, exploit reliable clients late;
+``adaptive``    cohort sizing driven by trailing EUR / straggler ratio
+                (grow the cohort while updates land, shrink it while
+                slots are being wasted), selection delegated to an
+                inner scheduler;
+``rotation``    the barrier-free driver's default: deterministic cyclic
+                rotation with exponential (virtual-time) failure
+                backoff, extracted verbatim from the old controller.
+
+Strategies keep working unchanged: ``Strategy.select`` is now a shim
+that delegates to the strategy's own scheduler (random for FedAvg-like
+strategies, Algorithm 2 for FedLesScan, whole-pool for SAFA).
+`state_dict`/`load_state_dict` round-trip scheduler state for the
+round-tagged checkpoint/resume path (fl/checkpointing.py).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.features import ema_step, normalize01
+from ..core.history import ClientHistoryDB
+from ..core.selection import SelectionPlan, select_clients, select_random
+from .metrics import trailing_eur, trailing_straggler_ratio
+
+
+def _rng_state(rng: np.random.Generator) -> dict:
+    return rng.bit_generator.state
+
+
+def _set_rng_state(rng: np.random.Generator, state) -> None:
+    # JSON round-trips tuple-typed entries as lists; numpy accepts dicts
+    rng.bit_generator.state = state
+
+
+class Scheduler:
+    """Base class: owns the RNG and the default (fixed) cohort size."""
+
+    name = "base"
+
+    def __init__(self, clients_per_round: int,
+                 rng: Optional[np.random.Generator] = None, seed: int = 0):
+        self.clients_per_round = clients_per_round
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
+
+    # ---- the three-call protocol the TrainingDriver consumes ----------
+    def propose(self, pool: Sequence[str], want: int, now: float,
+                round_number: int) -> List[str]:
+        """Pick up to `want` clients from `pool` (the currently eligible
+        population — the driver already excludes in-flight clients)."""
+        raise NotImplementedError
+
+    def notify_finish(self, client_id: str, now: float,
+                      duration_s: float = 0.0, cold: bool = False,
+                      late: bool = False) -> None:
+        """A client's update physically arrived (possibly late)."""
+
+    def notify_miss(self, client_id: str, now: float,
+                    crashed: bool = True) -> None:
+        """A client missed: `crashed` distinguishes terminal failures /
+        unresponsive clients from merely-late or never-started ones."""
+
+    def cohort_size(self, round_number: int, telemetry: Sequence) -> int:
+        """How many clients the next round should invoke.  `telemetry`
+        is the driver's trailing `RoundStats` window (may be empty)."""
+        return self.clients_per_round
+
+    # ---- trace + checkpoint surfaces ----------------------------------
+    def decision_info(self) -> dict:
+        """Extra payload for the last propose()'s `scheduling` record."""
+        return {}
+
+    def state_dict(self) -> dict:
+        return {"rng": _rng_state(self.rng)}
+
+    def load_state_dict(self, state: dict) -> None:
+        if "rng" in state:
+            _set_rng_state(self.rng, state["rng"])
+
+
+class RandomScheduler(Scheduler):
+    """Uniform random cohorts — FedAvg/FedProx selection."""
+
+    name = "random"
+
+    def propose(self, pool, want, now, round_number):
+        return select_random(pool, want, self.rng)
+
+
+class StrategySelectScheduler(Scheduler):
+    """Adapter for legacy Strategy subclasses that override `select`
+    directly (pre-scheduler API): `propose` calls the override, so a
+    hand-written selection policy keeps winning over the strategy's
+    default scheduler when the driver picks its cohorts."""
+
+    name = "strategy-select"
+
+    def __init__(self, strategy):
+        super().__init__(strategy.config.clients_per_round,
+                         rng=strategy.rng)
+        self.strategy = strategy
+
+    def propose(self, pool, want, now, round_number):
+        return self.strategy.select(pool, round_number)
+
+
+class FullPoolScheduler(Scheduler):
+    """SAFA-style: invoke every eligible client, ignore `want` (the
+    round then closes at the strategy's quorum)."""
+
+    name = "full"
+
+    def propose(self, pool, want, now, round_number):
+        return list(pool)
+
+
+class FedLesScanScheduler(Scheduler):
+    """Paper Algorithm 2 — tier selection over the behavioural history
+    (rookies → clustered participants → stragglers)."""
+
+    name = "fedlesscan"
+
+    def __init__(self, clients_per_round: int, history: ClientHistoryDB,
+                 max_rounds: int = 50, ema_alpha: float = 0.5,
+                 rng: Optional[np.random.Generator] = None, seed: int = 0):
+        super().__init__(clients_per_round, rng=rng, seed=seed)
+        self.history = history
+        self.max_rounds = max_rounds
+        self.ema_alpha = ema_alpha
+        self.last_plan: Optional[SelectionPlan] = None
+
+    def propose(self, pool, want, now, round_number):
+        plan = select_clients(self.history, pool, round_number,
+                              self.max_rounds, want, self.rng,
+                              ema_alpha=self.ema_alpha)
+        self.last_plan = plan
+        return plan.selected
+
+    def decision_info(self):
+        p = self.last_plan
+        if p is None:
+            return {}
+        return {"rookies": len(p.rookies),
+                "clustered": len(p.cluster_clients),
+                "stragglers": len(p.straggler_clients),
+                "n_clusters": p.n_clusters, "eps": p.eps}
+
+
+class ApodotikoScheduler(Scheduler):
+    """Score-based probabilistic sampling (Apodotiko, arXiv 2404.14033).
+
+    Each client gets a score in [0, 1] from four behavioural terms::
+
+        score = w_dur  · (1 − norm(durationEMA))     fast clients up
+              + w_succ · successRate                  reliable clients up
+              + w_cold · (1 − coldStartRate)          warm clients up
+              + w_stale· norm(roundsSinceSelected)    ignored clients up
+
+    Unseen clients score 1.0 (maximum) so every client is explored
+    before the policy starts discriminating.  The cohort is sampled
+    without replacement from ``softmax(score / T)`` with the temperature
+    annealed geometrically over rounds (``T = max(T_min, T0·decay^t)``)
+    — early rounds explore broadly, late rounds concentrate on the
+    clients that kept delivering.
+    """
+
+    name = "apodotiko"
+
+    def __init__(self, clients_per_round: int,
+                 rng: Optional[np.random.Generator] = None, seed: int = 0, *,
+                 ema_alpha: float = 0.5, temperature: float = 0.35,
+                 temperature_decay: float = 0.9,
+                 min_temperature: float = 0.05,
+                 w_duration: float = 0.3, w_success: float = 0.4,
+                 w_cold: float = 0.1, w_staleness: float = 0.2):
+        super().__init__(clients_per_round, rng=rng, seed=seed)
+        self.ema_alpha = ema_alpha
+        self.temperature = temperature
+        self.temperature_decay = temperature_decay
+        self.min_temperature = min_temperature
+        self.weights = (w_duration, w_success, w_cold, w_staleness)
+        # behavioural tallies, fed exclusively by the notify hooks
+        self._duration_ema: Dict[str, float] = {}
+        self._observations: Dict[str, int] = {}   # resolved invocations
+        self._successes: Dict[str, int] = {}
+        self._finishes: Dict[str, int] = {}       # cold-rate denominator
+        self._cold_starts: Dict[str, int] = {}
+        self._last_selected: Dict[str, int] = {}
+        self._last_scores: Dict[str, float] = {}
+
+    # ---- feedback -----------------------------------------------------
+    def notify_finish(self, client_id, now, duration_s=0.0, cold=False,
+                      late=False):
+        # a late arrival is the second half of an invocation the deadline
+        # already reported through notify_miss — it contributes duration /
+        # cold-start data but not a second resolved-invocation observation
+        # (else chronic-but-productive stragglers are double-penalized)
+        if not late:
+            self._observations[client_id] = (
+                self._observations.get(client_id, 0) + 1)
+            self._successes[client_id] = self._successes.get(client_id,
+                                                             0) + 1
+        self._finishes[client_id] = self._finishes.get(client_id, 0) + 1
+        if cold:
+            self._cold_starts[client_id] = (
+                self._cold_starts.get(client_id, 0) + 1)
+        prev = self._duration_ema.get(client_id)
+        self._duration_ema[client_id] = ema_step(prev, duration_s,
+                                                 self.ema_alpha)
+
+    def notify_miss(self, client_id, now, crashed=True):
+        self._observations[client_id] = self._observations.get(client_id,
+                                                               0) + 1
+
+    # ---- scoring ------------------------------------------------------
+    def _scores(self, pool: Sequence[str], round_number: int) -> np.ndarray:
+        w_dur, w_succ, w_cold, w_stale = self.weights
+        durations = np.array([self._duration_ema.get(c, 0.0) for c in pool])
+        seen = np.array([c in self._duration_ema for c in pool])
+        dur_norm = normalize01(durations, mask=seen)
+        succ = np.array([
+            self._successes.get(c, 0) / obs if (obs := self._observations.get(c, 0))
+            else 1.0 for c in pool])
+        cold = np.array([
+            self._cold_starts.get(c, 0) / fin
+            if (fin := self._finishes.get(c, 0)) else 0.0 for c in pool])
+        stale = np.array([
+            float(round_number - self._last_selected.get(c, -1))
+            for c in pool])
+        stale_norm = normalize01(stale)
+        scores = (w_dur * (1.0 - dur_norm) + w_succ * succ
+                  + w_cold * (1.0 - cold) + w_stale * stale_norm)
+        # rookies (never resolved): maximum score — explore them first
+        rookie = np.array([self._observations.get(c, 0) == 0 for c in pool])
+        scores[rookie] = 1.0
+        return scores
+
+    def propose(self, pool, want, now, round_number):
+        pool = list(pool)
+        k = min(want, len(pool))
+        if k <= 0:
+            return []
+        scores = self._scores(pool, round_number)
+        t = max(self.min_temperature,
+                self.temperature * self.temperature_decay ** round_number)
+        logits = scores / t
+        logits -= logits.max()
+        probs = np.exp(logits)
+        probs /= probs.sum()
+        chosen = list(self.rng.choice(pool, size=k, replace=False, p=probs))
+        for cid in chosen:
+            self._last_selected[cid] = round_number
+        self._last_scores = {c: float(s) for c, s in zip(pool, scores)}
+        return chosen
+
+    def decision_info(self):
+        if not self._last_scores:
+            return {}
+        vals = np.array(list(self._last_scores.values()))
+        return {"score_min": float(vals.min()),
+                "score_max": float(vals.max()),
+                "score_mean": float(vals.mean())}
+
+    def state_dict(self):
+        state = super().state_dict()
+        state.update(duration_ema=dict(self._duration_ema),
+                     observations=dict(self._observations),
+                     successes=dict(self._successes),
+                     finishes=dict(self._finishes),
+                     cold_starts=dict(self._cold_starts),
+                     last_selected=dict(self._last_selected))
+        return state
+
+    def load_state_dict(self, state):
+        super().load_state_dict(state)
+        self._duration_ema = dict(state.get("duration_ema", {}))
+        self._observations = dict(state.get("observations", {}))
+        self._successes = dict(state.get("successes", {}))
+        self._finishes = dict(state.get("finishes", {}))
+        self._cold_starts = dict(state.get("cold_starts", {}))
+        self._last_selected = dict(state.get("last_selected", {}))
+
+
+class AdaptiveScheduler(Scheduler):
+    """Adaptive cohort sizing over an inner selection policy.
+
+    Reads the trailing `RoundStats` window: while the effective update
+    ratio stays high (slots are not being wasted) the cohort grows one
+    client per round toward `max_cohort`; when EUR drops or the
+    straggler ratio spikes it shrinks toward `min_cohort` — spending
+    invocations where they convert into updates.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, clients_per_round: int,
+                 rng: Optional[np.random.Generator] = None, seed: int = 0, *,
+                 inner: Optional[Scheduler] = None,
+                 min_cohort: Optional[int] = None,
+                 max_cohort: Optional[int] = None, low_eur: float = 0.6,
+                 high_eur: float = 0.95, straggler_cap: float = 0.4,
+                 window: int = 3):
+        super().__init__(clients_per_round, rng=rng, seed=seed)
+        self.inner = inner or RandomScheduler(clients_per_round, rng=self.rng)
+        self.min_cohort = (min_cohort if min_cohort is not None
+                           else max(2, clients_per_round // 2))
+        self.max_cohort = max_cohort or 2 * clients_per_round
+        self.low_eur = low_eur
+        self.high_eur = high_eur
+        self.straggler_cap = straggler_cap
+        self.window = window
+        self._size = clients_per_round
+
+    def cohort_size(self, round_number, telemetry):
+        if telemetry:
+            eur = trailing_eur(telemetry, self.window)
+            straggling = trailing_straggler_ratio(telemetry, self.window)
+            if eur <= self.low_eur or straggling >= self.straggler_cap:
+                self._size = max(self.min_cohort, self._size - 1)
+            elif eur >= self.high_eur:
+                self._size = min(self.max_cohort, self._size + 1)
+        return self._size
+
+    def propose(self, pool, want, now, round_number):
+        return self.inner.propose(pool, want, now, round_number)
+
+    def notify_finish(self, client_id, now, **kwargs):
+        self.inner.notify_finish(client_id, now, **kwargs)
+
+    def notify_miss(self, client_id, now, crashed=True):
+        self.inner.notify_miss(client_id, now, crashed=crashed)
+
+    def decision_info(self):
+        info = {"cohort": self._size}
+        info.update(self.inner.decision_info())
+        return info
+
+    def state_dict(self):
+        state = super().state_dict()
+        state["size"] = self._size
+        state["inner"] = self.inner.state_dict()
+        return state
+
+    def load_state_dict(self, state):
+        super().load_state_dict(state)
+        self._size = int(state.get("size", self._size))
+        self.inner.load_state_dict(state.get("inner", {}))
+
+
+class RotationScheduler(Scheduler):
+    """Barrier-free rotation — the async driver's default policy.
+
+    Deterministic cyclic rotation over the whole population, skipping
+    clients outside the eligible pool (in flight) and clients in
+    failure backoff; when every eligible client is cooling down, the
+    first one is probed anyway.  A crashed/failing client's cooldown
+    doubles per consecutive failure (the async twin of the paper's
+    Eq. 1) and resets when an update of theirs finally arrives.
+    """
+
+    name = "rotation"
+
+    def __init__(self, clients_per_round: int, client_ids: Sequence[str],
+                 timeout_s: float = 120.0,
+                 rng: Optional[np.random.Generator] = None, seed: int = 0):
+        super().__init__(clients_per_round, rng=rng, seed=seed)
+        self._rotation = deque(client_ids)
+        self.timeout_s = timeout_s
+        self._fail_streak: Dict[str, int] = {}
+        self._cooldown_until: Dict[str, float] = {}
+
+    def _next(self, eligible: set, now: float) -> Optional[str]:
+        fallback = None
+        for _ in range(len(self._rotation)):
+            cid = self._rotation[0]
+            self._rotation.rotate(-1)
+            if cid not in eligible:
+                continue
+            if self._cooldown_until.get(cid, 0.0) <= now:
+                return cid
+            if fallback is None:
+                fallback = cid
+        return fallback
+
+    def propose(self, pool, want, now, round_number):
+        eligible = set(pool)
+        out: List[str] = []
+        for _ in range(want):
+            cid = self._next(eligible, now)
+            if cid is None:
+                break
+            out.append(cid)
+            eligible.discard(cid)
+        return out
+
+    def notify_finish(self, client_id, now, duration_s=0.0, cold=False,
+                      late=False):
+        self._fail_streak[client_id] = 0
+        self._cooldown_until.pop(client_id, None)
+
+    def notify_miss(self, client_id, now, crashed=True):
+        if not crashed:
+            return      # late-but-alive clients are not penalized
+        streak = self._fail_streak.get(client_id, 0) + 1
+        self._fail_streak[client_id] = streak
+        self._cooldown_until[client_id] = (
+            now + self.timeout_s * 2.0 ** (streak - 1))
+
+    def state_dict(self):
+        state = super().state_dict()
+        state.update(rotation=list(self._rotation),
+                     fail_streak=dict(self._fail_streak),
+                     cooldown_until=dict(self._cooldown_until))
+        return state
+
+    def load_state_dict(self, state):
+        super().load_state_dict(state)
+        if "rotation" in state:
+            self._rotation = deque(state["rotation"])
+        self._fail_streak = dict(state.get("fail_streak", {}))
+        self._cooldown_until = dict(state.get("cooldown_until", {}))
+
+
+SCHEDULERS = {cls.name: cls for cls in
+              (RandomScheduler, FullPoolScheduler, FedLesScanScheduler,
+               ApodotikoScheduler, AdaptiveScheduler, RotationScheduler)}
+
+
+def make_scheduler(name: str, clients_per_round: int, *,
+                   history: Optional[ClientHistoryDB] = None,
+                   max_rounds: int = 50, ema_alpha: float = 0.5,
+                   client_ids: Optional[Sequence[str]] = None,
+                   timeout_s: float = 120.0,
+                   rng: Optional[np.random.Generator] = None,
+                   seed: int = 0, **kwargs) -> Scheduler:
+    """Factory for the shipped scheduling policies."""
+    if name not in SCHEDULERS:
+        raise ValueError(f"unknown scheduler {name!r}; "
+                         f"available: {sorted(SCHEDULERS)}")
+    if name == "fedlesscan":
+        if history is None:
+            raise ValueError("the fedlesscan scheduler needs a "
+                             "ClientHistoryDB (history=...)")
+        return FedLesScanScheduler(clients_per_round, history,
+                                   max_rounds=max_rounds,
+                                   ema_alpha=ema_alpha, rng=rng, seed=seed)
+    if name == "rotation":
+        return RotationScheduler(clients_per_round, client_ids or [],
+                                 timeout_s=timeout_s, rng=rng, seed=seed)
+    return SCHEDULERS[name](clients_per_round, rng=rng, seed=seed, **kwargs)

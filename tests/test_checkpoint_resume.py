@@ -1,0 +1,200 @@
+"""Checkpoint/resume of the training driver (fl/checkpointing.py).
+
+The core guarantee: a run resumed from a round-tagged checkpoint
+replays the remaining rounds *exactly* as the uninterrupted run —
+same cohorts, same virtual timings, same params — because the
+checkpoint captures every mutable stream (history, driver/strategy/
+platform RNGs, scheduler state, cost tallies, virtual clock).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ClientHistoryDB, ClientUpdate, StrategyConfig, make_strategy
+from repro.faas import CostMeter, FaaSConfig, MockInvoker, SimulatedFaaSPlatform
+from repro.fl.checkpointing import RoundCheckpointer
+from repro.fl.controller import TrainingDriver
+
+IDS = [f"c{i}" for i in range(8)]
+
+
+def _work_fn(cid, params, rnd):
+    w = params["w"] + 0.1 * (rnd + 1)
+    return ClientUpdate(cid, {"w": w}, 10, rnd), 10.0
+
+
+class _StubPool:
+    def __init__(self, client_ids):
+        self._ids = list(client_ids)
+        self.clients = {}
+
+    @property
+    def client_ids(self):
+        return self._ids
+
+
+def _driver(strategy_name="fedlesscan", seed=0):
+    history = ClientHistoryDB()
+    history.ensure(IDS)
+    strategy = make_strategy(
+        strategy_name, StrategyConfig(clients_per_round=3, max_rounds=10),
+        history, seed=seed)
+    # jitter + stochastic cold starts exercise the platform RNG stream
+    platform = SimulatedFaaSPlatform(
+        FaaSConfig(cold_start_median_s=2.0, cold_start_sigma=0.3,
+                   perf_variation=(0.9, 1.1), failure_rate=0.0,
+                   network_jitter_s=0.4),
+        seed=seed)
+    invoker = MockInvoker(platform, _work_fn, {})
+    return TrainingDriver(strategy, invoker, _StubPool(IDS), history,
+                          CostMeter(), round_timeout_s=60.0, eval_every=0,
+                          seed=seed)
+
+
+def _round_key(stats):
+    return (stats.round_number, stats.selected, stats.successes, stats.late,
+            stats.crashed, stats.duration_s, stats.eur, stats.cost)
+
+
+def test_resumed_run_matches_uninterrupted(tmp_path):
+    # uninterrupted reference: 6 rounds straight through
+    ref = _driver()
+    ref_params, ref_res = ref.run({"w": jnp.zeros(4)}, 6)
+
+    # interrupted run: 3 rounds, checkpoint, fresh driver, resume
+    first = _driver()
+    ckpt = RoundCheckpointer(tmp_path / "ckpt")
+    mid_params, _ = first.run({"w": jnp.zeros(4)}, 3,
+                              checkpointer=ckpt, checkpoint_every=3)
+    assert ckpt.rounds() == [3]
+
+    resumed = _driver()                      # no memory of the first run
+    params0, next_round = ckpt.restore(resumed, {"w": jnp.zeros(4)})
+    assert next_round == 3
+    assert jnp.allclose(params0["w"], mid_params["w"])
+    tail_params, tail_res = resumed.run(params0, 6, start_round=next_round)
+
+    # the tail replays rounds 3..5 of the reference exactly
+    assert [_round_key(r) for r in tail_res.rounds] == \
+        [_round_key(r) for r in ref_res.rounds[3:]]
+    assert np.array_equal(np.asarray(tail_params["w"]),
+                          np.asarray(ref_params["w"]))
+    # cost books line up: reference total == checkpointed + tail deltas
+    assert resumed.cost.total == pytest.approx(ref.cost.total, abs=1e-12)
+    # behavioural history converged to the same records
+    assert resumed.history.to_payload() == ref.history.to_payload()
+
+
+def test_checkpointer_retention_and_latest(tmp_path):
+    d = _driver()
+    ckpt = RoundCheckpointer(tmp_path / "ckpt", keep=2)
+    params = {"w": jnp.zeros(4)}
+    for rnd in range(4):
+        params, _ = d.run_round(params, rnd)
+        ckpt.save(d, params, rnd + 1)
+    assert ckpt.rounds() == [3, 4]           # retention pruned 1 and 2
+    assert ckpt.latest_round() == 4
+
+
+def test_restore_rejects_strategy_mismatch(tmp_path):
+    d = _driver("fedlesscan")
+    ckpt = RoundCheckpointer(tmp_path / "ckpt")
+    params, _ = d.run_round({"w": jnp.zeros(4)}, 0)
+    ckpt.save(d, params, 1)
+    other = _driver("fedavg")
+    with pytest.raises(ValueError, match="strategy"):
+        ckpt.restore(other, {"w": jnp.zeros(4)})
+
+
+def test_restore_rejects_scheduler_mismatch(tmp_path):
+    """A checkpoint written under one cohort policy must not silently
+    load into a driver running another one."""
+    from repro.fl.scheduler import ApodotikoScheduler
+    d = _driver("fedlesscan")
+    ckpt = RoundCheckpointer(tmp_path / "ckpt")
+    params, _ = d.run_round({"w": jnp.zeros(4)}, 0)
+    ckpt.save(d, params, 1)
+    other = _driver("fedlesscan")
+    other.scheduler = ApodotikoScheduler(3, seed=0)
+    with pytest.raises(ValueError, match="scheduler"):
+        ckpt.restore(other, {"w": jnp.zeros(4)})
+
+
+def test_free_tier_allowance_survives_resume(tmp_path):
+    """Free-tier billing: the remaining monthly grant is cost state — a
+    resumed run must not re-grant the allowance the reference run had
+    already consumed."""
+    from repro.faas.cost import PriceBook
+
+    def driver():
+        history = ClientHistoryDB()
+        history.ensure(IDS)
+        strategy = make_strategy(
+            "fedlesscan", StrategyConfig(clients_per_round=3, max_rounds=10),
+            history, seed=0)
+        platform = SimulatedFaaSPlatform(
+            FaaSConfig(cold_start_median_s=2.0, cold_start_sigma=0.0,
+                       perf_variation=(1.0, 1.0), failure_rate=0.0,
+                       network_jitter_s=0.0), seed=0)
+        meter = CostMeter(prices=PriceBook(free_tier=True))
+        return TrainingDriver(strategy, MockInvoker(platform, _work_fn, {}),
+                              _StubPool(IDS), history, meter,
+                              round_timeout_s=60.0, eval_every=0, seed=0)
+
+    first = driver()
+    params, _ = first.run({"w": jnp.zeros(4)}, 2)
+    consumed = first.cost.allowance.vcpu_seconds
+    ckpt = RoundCheckpointer(tmp_path / "ckpt")
+    ckpt.save(first, params, 2)
+
+    resumed = driver()
+    ckpt.restore(resumed, {"w": jnp.zeros(4)})
+    assert resumed.cost.allowance.vcpu_seconds == consumed
+    assert resumed.cost.allowance.vcpu_seconds < 180_000.0
+
+
+def test_async_driver_refuses_checkpoint():
+    d = _driver("fedasync")
+    with pytest.raises(NotImplementedError, match="barrier"):
+        d.checkpoint_state()
+    with pytest.raises(ValueError, match="barrier"):
+        d.run({"w": jnp.zeros(4)}, 1, start_round=1)
+
+
+def test_experiment_resume_surface(tmp_path):
+    """End-to-end: ExperimentConfig.checkpoint_dir writes round-tagged
+    checkpoints and resume_from replays the remaining rounds exactly."""
+    from repro.data import label_sorted_shards, make_image_classification
+    from repro.data.synthetic import ArrayDataset
+    from repro.fl.experiment import (ExperimentConfig, ScenarioConfig,
+                                     run_experiment)
+    from repro.fl.tasks import ClassificationTask, TaskConfig
+    from repro.models.small import make_cnn
+
+    full = make_image_classification(400, image_size=14, n_classes=3, seed=0)
+    train = ArrayDataset(full.x[:300], full.y[:300])
+    test = ArrayDataset(full.x[300:], full.y[300:])
+    parts = label_sorted_shards(train, 8, 2, seed=0)
+    test_parts = label_sorted_shards(test, 8, 2, seed=0)
+    task = ClassificationTask(
+        make_cnn(14, 1, 3, 16),
+        TaskConfig(epochs=1, batch_size=32, per_sample_time_s=0.05))
+
+    def cfg(**kw):
+        return ExperimentConfig(
+            strategy="fedlesscan", n_rounds=4, clients_per_round=4,
+            eval_every=0, seed=0,
+            scenario=ScenarioConfig(round_timeout_s=60.0, seed=0), **kw)
+
+    ref = run_experiment(task, parts, test_parts, cfg())
+    ckdir = str(tmp_path / "ck")
+    run_experiment(task, parts, test_parts,
+                   cfg(checkpoint_dir=ckdir, checkpoint_every=3))
+    tail = run_experiment(task, parts, test_parts, cfg(resume_from=ckdir))
+    assert [r.round_number for r in tail.rounds] == [3]
+    for got, want in zip(tail.rounds, ref.rounds[3:]):
+        assert got.selected == want.selected
+        assert got.successes == want.successes
+        assert got.duration_s == want.duration_s
+    assert tail.final_accuracy == ref.final_accuracy

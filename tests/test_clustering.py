@@ -1,7 +1,10 @@
-"""Unit tests: DBSCAN + Calinski–Harabasz (from scratch, vs brute force)."""
+"""Unit tests: DBSCAN + Calinski–Harabasz (from scratch, vs brute force),
+and the vectorized grid-search hot path vs the scalar reference."""
 import numpy as np
 
-from repro.core import calinski_harabasz, cluster_clients, dbscan
+from repro.core import (calinski_harabasz, calinski_harabasz_batch,
+                        cluster_clients, dbscan, pairwise_sq_dists)
+from repro.core.clustering import ClusteringResult, _fold_noise
 
 
 def _brute_force_dbscan(x, eps, min_samples):
@@ -87,3 +90,132 @@ def test_identical_clients_single_cluster():
     res = cluster_clients(x)
     assert res.n_clusters == 1
     assert len(set(res.labels)) == 1
+
+
+# ------------------------------------------------------- BFS determinism
+def _bfs_reference_dbscan(x, eps, min_samples):
+    """Independent FIFO-BFS DBSCAN: index-order seeds, FIFO expansion,
+    sorted neighbour lists — the exact order contract of `dbscan`."""
+    n = len(x)
+    d = np.sqrt(((x[:, None] - x[None]) ** 2).sum(-1))
+    neigh = [sorted(np.nonzero(d[i] <= eps)[0]) for i in range(n)]
+    core = [len(neigh[i]) >= min_samples for i in range(n)]
+    labels = [-1] * n
+    c = 0
+    for i in range(n):
+        if labels[i] != -1 or not core[i]:
+            continue
+        labels[i] = c
+        queue = [i]
+        while queue:
+            p = queue.pop(0)                 # FIFO — breadth first
+            for q in neigh[p]:
+                if labels[q] == -1:
+                    labels[q] = c
+                    if core[q]:
+                        queue.append(int(q))
+        c += 1
+    return np.array(labels)
+
+
+def test_dbscan_expansion_is_bfs_and_deterministic():
+    """Regression for the docstring/behaviour mismatch: expansion claimed
+    BFS but popped the stack tail (DFS).  Labels must now match an
+    independent FIFO-BFS reference *exactly* (same cluster ids, not just
+    the same partition), and repeated runs must be byte-identical."""
+    rng = np.random.default_rng(42)
+    for _ in range(6):
+        x = np.concatenate([
+            rng.normal(0, 0.4, (15, 2)),
+            rng.normal(4, 0.4, (10, 2)),
+            rng.uniform(-8, 8, (5, 2)),
+        ])
+        for eps in (0.4, 0.8, 1.5):
+            got = dbscan(x, eps, min_samples=3)
+            assert np.array_equal(got, _bfs_reference_dbscan(x, eps, 3))
+            assert np.array_equal(got, dbscan(x, eps, min_samples=3))
+
+
+def test_dbscan_accepts_precomputed_distances():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(30, 2))
+    d2 = pairwise_sq_dists(x)
+    assert np.array_equal(dbscan(x, 0.9, 3), dbscan(x, 0.9, 3, d2=d2))
+
+
+# ------------------------------------------------ vectorized grid search
+def _cluster_clients_reference(x, min_samples=2):
+    """Pre-vectorization scalar reference: per-ε DBSCAN with a fresh
+    distance matrix, scored by the scalar `calinski_harabasz`."""
+    n = x.shape[0]
+    if n == 0:
+        return ClusteringResult(np.zeros(0, np.int64), 0.0, 0.0, 0)
+    if n == 1:
+        return ClusteringResult(np.zeros(1, np.int64), 0.0, 0.0, 1)
+    d = np.sqrt(np.sum((x[:, None, :] - x[None, :, :]) ** 2, axis=-1))
+    pos = d[d > 0]
+    if pos.size == 0:
+        return ClusteringResult(np.zeros(n, np.int64), 0.0, 0.0, 1)
+    eps_grid = np.unique(np.quantile(pos, np.linspace(0.05, 0.95, 13)))
+    best = None
+    for eps in eps_grid:
+        if eps <= 0:
+            continue
+        labels = _fold_noise(dbscan(x, float(eps), min_samples))
+        score = calinski_harabasz(x, labels)
+        cand = ClusteringResult(labels, float(eps), score,
+                                len(np.unique(labels)))
+        if best is None or cand.score > best.score:
+            best = cand
+    if best is None or best.n_clusters < 2 or not np.isfinite(best.score):
+        return ClusteringResult(np.zeros(n, np.int64),
+                                float(eps_grid[-1]), 0.0, 1)
+    return best
+
+
+def test_vectorized_grid_search_matches_scalar_reference():
+    """Acceptance: the batched-distance / vectorized-CH hot path returns
+    labels identical to the scalar reference on randomized inputs."""
+    rng = np.random.default_rng(0)
+    for trial in range(10):
+        k = int(rng.integers(1, 4))
+        x = np.concatenate(
+            [rng.normal(rng.uniform(-20, 20, 2), rng.uniform(0.2, 2.0),
+                        (int(rng.integers(3, 15)), 2)) for _ in range(k)]
+            + [rng.uniform(-25, 25, (int(rng.integers(0, 4)), 2))])
+        got = cluster_clients(x)
+        want = _cluster_clients_reference(x)
+        assert np.array_equal(got.labels, want.labels)
+        assert got.eps == want.eps
+        assert got.n_clusters == want.n_clusters
+
+
+def test_batch_ch_matches_scalar():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(40, 2))
+    labelings = np.stack([
+        rng.integers(0, 4, 40),
+        np.zeros(40, np.int64),                  # k=1 → -inf
+        np.arange(40),                           # k=N → -inf
+        np.repeat([0, 1], 20),
+    ])
+    got = calinski_harabasz_batch(x, labelings)
+    want = np.array([calinski_harabasz(x, lab) for lab in labelings])
+    finite = np.isfinite(want)
+    assert np.array_equal(finite, np.isfinite(got))
+    assert np.allclose(got[finite], want[finite], rtol=1e-9)
+    assert np.array_equal(got[~finite], want[~finite])
+
+
+# ---------------------------------------------------- degenerate inputs
+def test_single_client_clustering_ch_undefined():
+    """One participant: the CH index is undefined (k == N == 1) — the
+    grid search must fall back to a single cluster, not crash."""
+    res = cluster_clients(np.array([[42.0, 1.0]]))
+    assert res.n_clusters == 1
+    assert list(res.labels) == [0]
+    # two clients: every labeling has k < 2 or k == N → single cluster
+    res2 = cluster_clients(np.array([[0.0, 0.0], [10.0, 0.0]]))
+    assert res2.n_clusters == 1
+    assert calinski_harabasz(np.array([[0.0, 0.0], [10.0, 0.0]]),
+                             np.array([0, 1])) == float("-inf")

@@ -58,6 +58,50 @@ def test_selection_caps_at_population():
     assert sorted(plan.selected) == sorted(ids)
 
 
+def test_all_rookie_pool_smaller_than_cohort():
+    """Edge case: every client is a rookie and the cohort wants more
+    than the pool holds — everyone is selected, once."""
+    db, ids = _db_with(n_rookies=4)
+    plan = select_clients(db, ids, 0, 50, 10, np.random.default_rng(0))
+    assert sorted(plan.selected) == sorted(ids)
+    assert sorted(plan.rookies) == sorted(ids)
+    assert plan.cluster_clients == [] and plan.straggler_clients == []
+
+
+def test_cohort_exceeds_mixed_tier_population():
+    """clients_per_round > len(pool) with all three tiers present: the
+    whole population is selected exactly once, tier priority intact."""
+    db, ids = _db_with(n_rookies=2, n_participants=3, n_stragglers=2)
+    plan = select_clients(db, ids, 6, 50, 20, np.random.default_rng(1))
+    assert sorted(plan.selected) == sorted(ids)
+    assert len(set(plan.selected)) == len(ids)
+    assert len(plan.rookies) == 2
+    assert len(plan.cluster_clients) == 3
+    assert len(plan.straggler_clients) == 2
+
+
+def test_empty_participant_tier_falls_through_to_stragglers():
+    """No participants at all: after the rookies, demand is met from
+    the straggler tier without entering the clustering path."""
+    db, ids = _db_with(n_rookies=2, n_stragglers=6)
+    plan = select_clients(db, ids, 6, 50, 5, np.random.default_rng(0))
+    assert len(plan.selected) == 5
+    assert len(plan.rookies) == 2
+    assert plan.cluster_clients == []        # nothing to cluster
+    assert len(plan.straggler_clients) == 3
+    assert plan.n_clusters == 0
+
+
+def test_single_participant_cluster_path():
+    """One participant forces the single-client clustering branch (CH
+    undefined) inside Algorithm 2 — it must still be selectable."""
+    db, ids = _db_with(n_rookies=1, n_participants=1)
+    plan = select_clients(db, ids, 3, 50, 2, np.random.default_rng(0))
+    assert sorted(plan.selected) == sorted(ids)
+    assert plan.cluster_clients == ["part0"]
+    assert plan.n_clusters <= 1
+
+
 def test_least_invoked_preferred_within_cluster():
     """Paper §VI-B: FedLesScan prioritises clients with the fewest
     invocations inside a selected cluster."""
