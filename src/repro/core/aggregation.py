@@ -48,6 +48,22 @@ class ClientUpdate:
     training_time: float = 0.0
 
 
+def update_to_record(update: ClientUpdate) -> dict:
+    """JSON-ready metadata of one update (checkpoint surface) — the
+    params pytree travels separately in the checkpoint's array store."""
+    return {"client_id": update.client_id,
+            "num_samples": update.num_samples,
+            "round_number": update.round_number,
+            "training_time": update.training_time}
+
+
+def update_from_record(rec: dict, params: Pytree) -> ClientUpdate:
+    return ClientUpdate(params=params, client_id=rec["client_id"],
+                        num_samples=rec["num_samples"],
+                        round_number=rec["round_number"],
+                        training_time=rec.get("training_time", 0.0))
+
+
 @partial(jax.jit, static_argnums=())
 def _weighted_sum(stacked: Pytree, coeffs: jnp.ndarray) -> Pytree:
     """Σ_k coeffs[k] · leaf[k] for every leaf of a stacked pytree."""
@@ -217,3 +233,24 @@ class UpdateStore:
 
     def __len__(self) -> int:
         return len(self._pending)
+
+    # ---- checkpoint surface (fl/checkpointing.py) --------------------
+    def state_dict(self, arrays: dict,
+                   prefix: str = "strategy/pending") -> List[dict]:
+        """Snapshot the pending entries; update pytrees go into `arrays`
+        under `prefix`-keyed slots (the store owns its own layout — the
+        strategies just forward the call)."""
+        out = []
+        for i, (arrival, update) in enumerate(self._pending):
+            arrays[f"{prefix}/{i}"] = update.params
+            rec = update_to_record(update)
+            rec["arrival"] = arrival
+            out.append(rec)
+        return out
+
+    def load_state_dict(self, entries: List[dict], arrays: dict,
+                        prefix: str = "strategy/pending") -> None:
+        self._pending = [
+            (float(rec["arrival"]),
+             update_from_record(rec, arrays[f"{prefix}/{i}"]))
+            for i, rec in enumerate(entries)]

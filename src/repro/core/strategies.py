@@ -25,7 +25,8 @@ from typing import Any, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .aggregation import (ClientUpdate, UpdateStore, aggregate,
-                          fedavg_aggregate, staleness_aggregate)
+                          fedavg_aggregate, staleness_aggregate,
+                          update_from_record, update_to_record)
 from .history import ClientHistoryDB
 from .selection import SelectionPlan
 
@@ -151,6 +152,27 @@ class Strategy:
         """FedProx adds mu/2 ||w - w_global||^2 to the local loss; other
         strategies return 0.0 (no-op)."""
         return 0.0
+
+    # ---- checkpoint surface (fl/checkpointing.py) -----------------------
+    def state_dict(self, arrays: Optional[dict] = None) -> dict:
+        """JSON-ready snapshot of the strategy's mutable state: the RNG
+        stream, the last merge count, and the semi-async update store's
+        pending (arrived-but-unmerged / still-in-flight) updates.  Update
+        pytrees are deposited into `arrays` under ``strategy/...`` keys
+        (they share the global model's tree structure) and saved next to
+        the checkpoint params."""
+        arrays = {} if arrays is None else arrays
+        return {"rng": self.rng.bit_generator.state,
+                "last_aggregate_count": self.last_aggregate_count,
+                "pending": self.update_store.state_dict(arrays)}
+
+    def load_state_dict(self, state: dict,
+                        arrays: Optional[dict] = None) -> None:
+        arrays = {} if arrays is None else arrays
+        if "rng" in state:
+            self.rng.bit_generator.state = state["rng"]
+        self.last_aggregate_count = int(state.get("last_aggregate_count", 0))
+        self.update_store.load_state_dict(state.get("pending", []), arrays)
 
 
 class FedAvg(Strategy):
@@ -300,6 +322,28 @@ class FedBuff(Strategy):
         if not self._buffer:
             return None
         return self._flush(global_params, current_round)
+
+    def state_dict(self, arrays=None):
+        """FedBuff's partial buffer is checkpoint state: an async snapshot
+        can land with 0 < len(buffer) < K delivered-but-unmerged updates."""
+        arrays = {} if arrays is None else arrays
+        state = super().state_dict(arrays)
+        buffered = []
+        for i, (produced, u) in enumerate(self._buffer):
+            arrays[f"strategy/buffer/{i}"] = u.params
+            rec = update_to_record(u)
+            rec["produced"] = produced
+            buffered.append(rec)
+        state["buffer"] = buffered
+        return state
+
+    def load_state_dict(self, state, arrays=None):
+        arrays = {} if arrays is None else arrays
+        super().load_state_dict(state, arrays)
+        self._buffer = [
+            (int(rec["produced"]),
+             update_from_record(rec, arrays[f"strategy/buffer/{i}"]))
+            for i, rec in enumerate(state.get("buffer", []))]
 
 
 STRATEGIES = {cls.name: cls

@@ -132,3 +132,36 @@ class CostMeter:
                                       self.prices, self.allowance)
         return self._record(c, round_duration_s, "straggler", client_id,
                             round_number)
+
+    # ---- checkpoint surface (fl/checkpointing.py) --------------------
+    def state_dict(self) -> dict:
+        """JSON-ready snapshot of the tallies.  Round keys are ints in
+        memory but JSON object keys are strings — serialization stringifies
+        them here and `load_state_dict` casts them back, so a resumed
+        meter's `rounds` keys stay ints and per-round totals keep
+        accumulating into the same buckets."""
+        state = {
+            "total": self.total,
+            "invocations": self.invocations,
+            "by_client": dict(self.by_client),
+            "rounds": {str(k): v for k, v in self.rounds.items()},
+        }
+        if self.allowance is not None:
+            # free-tier billing: the remaining monthly grant is part of
+            # the cost state (a resumed run must not re-grant it)
+            state["allowance"] = {
+                "invocations": self.allowance.invocations,
+                "vcpu_seconds": self.allowance.vcpu_seconds,
+                "gib_seconds": self.allowance.gib_seconds,
+            }
+        return state
+
+    def load_state_dict(self, state: dict) -> None:
+        self.total = float(state.get("total", 0.0))
+        self.invocations = int(state.get("invocations", 0))
+        self.by_client = dict(state.get("by_client", {}))
+        self.rounds = {int(k): v
+                       for k, v in state.get("rounds", {}).items()}
+        if "allowance" in state and self.allowance is not None:
+            for attr, left in state["allowance"].items():
+                setattr(self.allowance, attr, float(left))

@@ -22,12 +22,19 @@ Event kinds model the lifecycle of one serverless invocation:
     PLATFORM_FAILURE  the platform reported an error / timeout kill
     WARM_EXPIRY       an idle warm instance scales to zero
     ROUND_DEADLINE    the controller's round timer fired
+
+The queue is also the checkpoint substrate (fl/checkpointing.py): every
+``data`` payload an event carries must be a plain JSON-serializable
+record — platform references travel by *name*, never as live objects —
+so ``state_dict``/``load_state_dict`` can snapshot the pending timeline
+and a restored run replays the remaining events exactly, in-flight
+stragglers included.  Restored events keep their original ``seq``, so
+the (time, seq) replay order is byte-stable across a save/restore.
 """
 from __future__ import annotations
 
 import enum
 import heapq
-import itertools
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -43,6 +50,11 @@ class EventKind(enum.Enum):
     ROUND_DEADLINE = "round_deadline"
 
 
+# compaction thresholds: rebuild the heap when cancelled tombstones
+# outnumber live entries and the heap is big enough for it to matter
+_COMPACT_MIN_SIZE = 64
+
+
 @dataclass
 class Event:
     time: float
@@ -52,10 +64,35 @@ class Event:
     round_number: Optional[int] = None
     data: Dict[str, Any] = field(default_factory=dict)
     cancelled: bool = False
+    # owning queue backref so lazy cancellation keeps the queue's live
+    # counter exact (never serialized, never compared)
+    _queue: Optional["EventQueue"] = field(default=None, repr=False,
+                                           compare=False)
 
     def cancel(self) -> None:
         """Lazy cancellation: the heap entry stays, `pop` skips it."""
+        if self.cancelled:
+            return
         self.cancelled = True
+        if self._queue is not None:
+            self._queue._on_cancel()
+
+    # ---- checkpoint surface ------------------------------------------
+    def to_record(self) -> dict:
+        """JSON-ready snapshot.  `data` must already be a plain record
+        (strings/numbers/lists) — enforced by convention: every scheduler
+        of events passes serializable payloads only."""
+        return {"time": self.time, "seq": self.seq, "kind": self.kind.value,
+                "client_id": self.client_id,
+                "round_number": self.round_number, "data": dict(self.data)}
+
+    @classmethod
+    def from_record(cls, rec: dict) -> "Event":
+        return cls(time=float(rec["time"]), seq=int(rec["seq"]),
+                   kind=EventKind(rec["kind"]),
+                   client_id=rec.get("client_id"),
+                   round_number=rec.get("round_number"),
+                   data=dict(rec.get("data", {})))
 
 
 class EventQueue:
@@ -65,12 +102,17 @@ class EventQueue:
     only ever moves at event boundaries and every consumer observes the
     same timeline.  Popped events are appended to `trace` — tests assert
     on it and it doubles as a simulation log.
+
+    ``len(queue)`` is O(1): a live-event counter is maintained by
+    `schedule`/`cancel`/`pop`, and the heap is compacted (cancelled
+    tombstones dropped) whenever they outnumber the live entries.
     """
 
     def __init__(self, clock: Optional[VirtualClock] = None, recorder=None):
         self.clock = clock or VirtualClock()
         self._heap: List[tuple] = []
-        self._seq = itertools.count()
+        self._next_seq = 0
+        self._live = 0
         self.trace: List[Event] = []
         # optional TraceRecorder (faas/trace.py): notified of every popped
         # event for opt-in event-stream export
@@ -80,10 +122,16 @@ class EventQueue:
     def schedule(self, time: float, kind: EventKind,
                  client_id: Optional[str] = None,
                  round_number: Optional[int] = None, **data: Any) -> Event:
-        ev = Event(time=float(time), seq=next(self._seq), kind=kind,
+        ev = Event(time=float(time), seq=self._next_seq, kind=kind,
                    client_id=client_id, round_number=round_number, data=data)
-        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        self._next_seq += 1
+        self._push(ev)
         return ev
+
+    def _push(self, ev: Event) -> None:
+        ev._queue = self
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        self._live += 1
 
     def pop(self) -> Optional[Event]:
         """Next live event (clock advances to it), or None when drained."""
@@ -91,6 +139,11 @@ class EventQueue:
             _, _, ev = heapq.heappop(self._heap)
             if ev.cancelled:
                 continue
+            self._live -= 1
+            # detach: a later cancel() of this already-delivered event
+            # (fired deadlines, resolved lifecycles) must not decrement
+            # the live counter a second time
+            ev._queue = None
             self.clock.advance_to(ev.time)
             self.trace.append(ev)
             if self.recorder is not None:
@@ -104,7 +157,45 @@ class EventQueue:
         return self._heap[0][0] if self._heap else None
 
     def __len__(self) -> int:
-        return sum(1 for _, _, ev in self._heap if not ev.cancelled)
+        return self._live
 
     def __bool__(self) -> bool:
-        return len(self) > 0
+        return self._live > 0
+
+    # ---- lazy-cancellation bookkeeping --------------------------------
+    def _on_cancel(self) -> None:
+        self._live -= 1
+        if (len(self._heap) >= _COMPACT_MIN_SIZE
+                and self._live * 2 < len(self._heap)):
+            self._compact()
+
+    def _compact(self) -> None:
+        """Drop cancelled tombstones: rebuild the heap from live events."""
+        entries = [e for e in self._heap if not e[2].cancelled]
+        heapq.heapify(entries)
+        self._heap = entries
+
+    # ---- checkpoint surface (fl/checkpointing.py) --------------------
+    def state_dict(self) -> dict:
+        """Snapshot the pending timeline: every live event (original seq
+        preserved) plus the schedule counter, so a restored queue keeps
+        scheduling new events past the old counter and replays the
+        remaining (time, seq) order byte-identically."""
+        live = sorted((e[2] for e in self._heap if not e[2].cancelled),
+                      key=lambda ev: (ev.time, ev.seq))
+        return {"next_seq": self._next_seq,
+                "events": [ev.to_record() for ev in live]}
+
+    def load_state_dict(self, state: dict) -> Dict[int, Event]:
+        """Rebuild the pending timeline; returns ``{seq: Event}`` so
+        callers holding event handles (the engine's cancellation lists,
+        the async driver's deadline tickets) can re-link them."""
+        self._heap = []
+        self._live = 0
+        by_seq: Dict[int, Event] = {}
+        for rec in state.get("events", []):
+            ev = Event.from_record(rec)
+            self._push(ev)
+            by_seq[ev.seq] = ev
+        self._next_seq = int(state.get("next_seq", 0))
+        return by_seq

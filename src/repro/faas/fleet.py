@@ -67,6 +67,19 @@ class RoutingPolicy:
         self.assignment[client_id] = name      # sticky from now on
         return name
 
+    # ---- checkpoint surface (fl/checkpointing.py) --------------------
+    def state_dict(self) -> dict:
+        """JSON-ready snapshot of the mutable routing state (sticky
+        assignments, rotation cursor, RNG stream)."""
+        return {"assignment": dict(self.assignment), "rr": self._rr,
+                "rng": self._rng.bit_generator.state}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.assignment = dict(state.get("assignment", {}))
+        self._rr = int(state.get("rr", 0))
+        if "rng" in state:
+            self._rng.bit_generator.state = state["rng"]
+
 
 class TelemetryRoutingPolicy(RoutingPolicy):
     """Routing that reacts to the fleet's trace telemetry.
@@ -175,6 +188,22 @@ class PlatformFleet:
         routing policy may independently hold the same recorder)."""
         for p in self.platforms.values():
             p.recorder = recorder
+
+    # ---- checkpoint surface (fl/checkpointing.py) --------------------
+    def state_dict(self) -> dict:
+        """Snapshot every platform's mutable state (RNG streams, warm
+        pools, counters) plus the routing decisions — the multi-provider
+        twin of `SimulatedFaaSPlatform.state_dict`.  The shared virtual
+        clock is owned by the training driver's snapshot."""
+        return {"platforms": {name: p.state_dict()
+                              for name, p in self.platforms.items()},
+                "routing": self.routing.state_dict()}
+
+    def load_state_dict(self, state: dict) -> None:
+        for name, pstate in state.get("platforms", {}).items():
+            if name in self.platforms:
+                self.platforms[name].load_state_dict(pstate)
+        self.routing.load_state_dict(state.get("routing", {}))
 
     # ---- scenario knobs ----------------------------------------------
     def set_platform_down(self, name: str, down: bool = True) -> None:

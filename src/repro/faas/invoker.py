@@ -21,10 +21,11 @@ Two layers live here:
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from ..core.aggregation import ClientUpdate
+from ..core.aggregation import (ClientUpdate, update_from_record,
+                                update_to_record)
 from .events import Event, EventKind, EventQueue
 from .platform import (FAIL_PLATFORM, FAIL_TIMEOUT, ClientProfile,
                        InvocationOutcome, InvocationPlan,
@@ -188,7 +189,10 @@ class InvocationEngine:
         elif kind is EventKind.PLATFORM_FAILURE:
             return self._failure(queue, event)
         elif kind is EventKind.WARM_EXPIRY:
-            platform = event.data.get("platform")
+            # events carry the platform *name* (payloads must stay
+            # serializable for the checkpoint snapshot); resolve it
+            # against the invoker's platform registry here
+            platform = self._platform_named(event.data.get("platform"))
             if platform is not None:
                 platform.expire_warm(event.client_id, event.time)
         # COLD_START_DONE / ROUND_DEADLINE: telemetry / controller-owned
@@ -228,7 +232,7 @@ class InvocationEngine:
                 plan.finish_time, EventKind.CLIENT_FINISH, client_id=cid,
                 round_number=st.round_number))
             queue.schedule(plan.warm_until, EventKind.WARM_EXPIRY,
-                           client_id=cid, platform=platform)
+                           client_id=cid, platform=platform.name)
         elif plan.fail_time != float("inf"):
             scheduled.append(queue.schedule(
                 plan.fail_time, EventKind.PLATFORM_FAILURE, client_id=cid,
@@ -375,3 +379,108 @@ class InvocationEngine:
     def _maybe_gc(self, st: _RoundState) -> None:
         if st.closed and not st.inflight and not st.waiting:
             self._rounds.pop(st.round_number, None)
+
+    # ------------------------------------------------------------------
+    # checkpoint surface (fl/checkpointing.py)
+    # ------------------------------------------------------------------
+    def _platform_named(self, name) -> Optional[SimulatedFaaSPlatform]:
+        """Resolve a platform by name against the invoker (single-platform
+        MockInvoker or a MultiPlatformInvoker's fleet).  Unknown names
+        resolve to None — expiring a *different* platform's warm pool
+        would be worse than ignoring a stale event."""
+        platforms = getattr(self.invoker, "platforms", None)
+        if platforms is not None:
+            return platforms.get(name)
+        platform = getattr(self.invoker, "platform", None)
+        if platform is not None and (name is None or platform.name == name):
+            return platform
+        return None
+
+    def state_dict(self, arrays: Dict[str, Any]) -> dict:
+        """JSON-ready snapshot of every open round's scheduling state.
+
+        Scalars (plans, attempts, failed outcomes, waiting/retrying/done
+        sets) go into the returned record; pytrees — the round's global
+        params and each cached `ClientUpdate` — are deposited into
+        `arrays` under ``engine/...`` keys and saved alongside the
+        checkpoint params (they share the model's tree structure).
+        In-flight updates are not stored twice: an inflight entry's
+        update *is* its work-cache entry, so only the cache is saved and
+        `load_state_dict` re-links the reference.  Global-params trees
+        are deduplicated by object identity: the async driver opens one
+        engine round per in-flight ticket, all sharing the same model
+        object, which would otherwise put N full model copies in every
+        snapshot.
+        """
+        rounds = []
+        params_slots: Dict[int, str] = {}    # id(tree) -> arrays key
+        for rnd, st in sorted(self._rounds.items()):
+            params_key = params_slots.get(id(st.global_params))
+            if params_key is None:
+                params_key = f"engine/params/{len(params_slots)}"
+                params_slots[id(st.global_params)] = params_key
+                arrays[params_key] = st.global_params
+            work = {}
+            for cid, (update, nominal_s) in st.work.items():
+                entry = {"nominal_s": nominal_s, "update": None}
+                if update is not None:
+                    arrays[f"engine/{rnd}/work/{cid}"] = update.params
+                    entry["update"] = update_to_record(update)
+                work[cid] = entry
+            rounds.append({
+                "round": rnd,
+                "params_key": params_key,
+                "client_ids": list(st.client_ids),
+                "waiting": list(st.waiting),
+                "active": st.active,
+                "platform_names": dict(st.platform_names),
+                "attempts": dict(st.attempts),
+                "failed": {cid: [asdict(o) for o in outs]
+                           for cid, outs in st.failed.items()},
+                "inflight": {cid: {"plan": asdict(plan),
+                                   "has_update": update is not None,
+                                   "scheduled": [ev.seq for ev in scheduled
+                                                 if not ev.cancelled]}
+                             for cid, (plan, update, scheduled)
+                             in st.inflight.items()},
+                "work": work,
+                "retrying": sorted(st.retrying),
+                "done": sorted(st.done),
+                "closed": st.closed,
+            })
+        return {"rounds": rounds}
+
+    def load_state_dict(self, state: dict, events_by_seq: Dict[int, Event],
+                        arrays: Dict[str, Any]) -> None:
+        """Inverse of `state_dict`: rebuild the open rounds and re-link
+        their scheduled-event handles to the restored queue's events."""
+        self._rounds = {}
+        for rec in state.get("rounds", []):
+            rnd = rec["round"]
+            st = _RoundState(rnd, rec["client_ids"],
+                             arrays.get(rec.get("params_key")))
+            st.waiting = deque(rec.get("waiting", []))
+            st.active = int(rec.get("active", 0))
+            st.platform_names = dict(rec.get("platform_names", {}))
+            st.attempts = {cid: int(n)
+                           for cid, n in rec.get("attempts", {}).items()}
+            st.failed = {cid: [InvocationOutcome(**o) for o in outs]
+                         for cid, outs in rec.get("failed", {}).items()}
+            for cid, w in rec.get("work", {}).items():
+                update = None
+                if w.get("update") is not None:
+                    update = update_from_record(
+                        w["update"], arrays[f"engine/{rnd}/work/{cid}"])
+                st.work[cid] = (update, float(w["nominal_s"]))
+            for cid, inf in rec.get("inflight", {}).items():
+                update = (st.work[cid][0] if inf.get("has_update")
+                          else None)
+                scheduled = [events_by_seq[seq]
+                             for seq in inf.get("scheduled", [])
+                             if seq in events_by_seq]
+                st.inflight[cid] = (InvocationPlan(**inf["plan"]), update,
+                                    scheduled)
+            st.retrying = set(rec.get("retrying", []))
+            st.done = set(rec.get("done", []))
+            st.closed = bool(rec.get("closed", False))
+            self._rounds[rnd] = st

@@ -143,6 +143,20 @@ class TraceRecorder:
                 "client_id": ev.client_id, "round": ev.round_number,
             })
 
+    # ---- checkpoint surface (fl/checkpointing.py) ---------------------
+    def telemetry_state_dict(self) -> dict:
+        """Snapshot the rolling per-platform windows (NOT the record
+        stream: a resumed run writes its own trace, but telemetry-reactive
+        routing must keep seeing the same recent failure/cold rates)."""
+        return {name: [[bool(f), bool(c)] for f, c in w]
+                for name, w in self._windows.items()}
+
+    def load_telemetry_state(self, state: dict) -> None:
+        self._windows = {
+            name: deque(((bool(f), bool(c)) for f, c in obs),
+                        maxlen=self.telemetry_window)
+            for name, obs in state.items()}
+
     # ---- telemetry (read by TelemetryRoutingPolicy) -------------------
     def platform_stats(self) -> Dict[str, dict]:
         """Recent per-platform rates over the rolling window."""

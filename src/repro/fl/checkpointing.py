@@ -1,36 +1,97 @@
-"""Round-tagged checkpoint/resume of the training driver.
+"""Full-fidelity checkpoint/resume of the training driver.
 
-A checkpoint for round *r* (meaning: rounds ``0..r-1`` are done, round
-*r* runs next) is two files in one directory::
+A checkpoint tagged *r* is two files in one directory::
 
-    round_000004.npz    global model params (checkpoint/checkpoint.py)
+    round_000004.npz    arrays: the global params plus every pytree the
+                        snapshot references (in-flight rounds' global
+                        params, cached client updates, semi-async/FedBuff
+                        update buffers) and a `_meta` pair descriptor
     round_000004.json   driver state (TrainingDriver.checkpoint_state():
                         history payload, RNG streams, scheduler state,
-                        cost tallies, virtual clock, trailing RoundStats)
+                        cost tallies, virtual clock, trailing RoundStats,
+                        the pending event queue, the invocation engine's
+                        in-flight state, warm pools / fleet routing, and
+                        — in async mode — the barrier-free loop state)
 
-Resume rebuilds the experiment wiring from the same config/seed, then
-`RoundCheckpointer.restore` loads the params and replays the state into
-the fresh driver — the remaining rounds then reproduce an uninterrupted
-run exactly, provided no invocation was in flight across the checkpoint
-boundary (a straggler still running at the boundary loses its future
-arrival; everything billed before the boundary is preserved).  Surface:
-``ExperimentConfig.checkpoint_dir``/``checkpoint_every`` to write,
-``ExperimentConfig.resume_from`` to resume.
+Schema v2 checkpoints are **event-queue snapshots**: the pending
+timeline (events + seq counter) and every in-flight invocation are part
+of the state, so a restored run replays the remaining events
+byte-identically to an uninterrupted same-seed run — in-flight
+stragglers included.  In barrier modes the tag is the next round to
+execute; in async mode there is no round, so `checkpoint_every` counts
+*virtual seconds* and the tag is a monotone snapshot index (resume
+always continues mid-timeline from the restored loop state).
+
+Both files are written to temp names and moved into place with
+``os.replace``, so a crash mid-write can never leave a torn file; the
+JSON and npz of one tag carry a matching ``pair`` descriptor (schema,
+tag, virtual clock, charge count) that `restore` validates, so a
+half-updated pair is rejected loudly instead of silently resumed.
+
+Schema v1 checkpoints (PR 3, round-boundary only) still load: they
+migrate to an empty-queue snapshot, which preserves their documented
+semantics (any invocation in flight at the boundary loses its future
+arrival).  Surface: ``ExperimentConfig.checkpoint_dir`` /
+``checkpoint_every`` to write, ``ExperimentConfig.resume_from`` to
+resume.
 """
 from __future__ import annotations
 
 import json
+import os
 import re
 from pathlib import Path
-from typing import Any, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
-from ..checkpoint.checkpoint import load_pytree, save_pytree
+import jax
+import numpy as np
+
+from ..checkpoint.checkpoint import _flatten_with_paths, _path_str, load_pytree
 
 Pytree = Any
 
+SCHEMA_VERSION = 2
+_SEP = "|"
+_META_KEY = "_meta"
+
+
+def _flat_entries(prefix: str, tree: Pytree) -> Dict[str, np.ndarray]:
+    flat, _ = _flatten_with_paths(tree)
+    return {f"{prefix}{_SEP}{k}": v for k, v in flat.items()}
+
+
+def _unflatten_like(data, prefix: str, like: Pytree) -> Pytree:
+    """Rebuild a pytree with `like`'s structure from `prefix|<path>` npz
+    entries (shape-checked, dtype restored from `like`)."""
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, leaf in flat_like:
+        key = f"{prefix}{_SEP}" + _SEP.join(_path_str(p) for p in kp)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _atomic_write_text(path: Path, text: str) -> None:
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(text)
+    os.replace(tmp, path)
+
+
+def _atomic_write_npz(path: Path, entries: Dict[str, np.ndarray]) -> None:
+    tmp = path.with_name(path.name + ".tmp")
+    # np.savez appends ".npz" to bare filenames; an open handle keeps the
+    # temp name exact so os.replace lands on the real target
+    with open(tmp, "wb") as fh:
+        np.savez(fh, **entries)
+    os.replace(tmp, path)
+
 
 class RoundCheckpointer:
-    """Writes/restores round-tagged driver checkpoints with retention."""
+    """Writes/restores tagged full-fidelity checkpoints with retention."""
 
     def __init__(self, directory: str, keep: int = 3):
         self.dir = Path(directory)
@@ -39,12 +100,27 @@ class RoundCheckpointer:
 
     # ---- write --------------------------------------------------------
     def save(self, driver, params: Pytree, next_round: int) -> Path:
-        """Snapshot `driver` + `params` as the checkpoint for
-        `next_round` (the first round a resumed run will execute)."""
-        state = driver.checkpoint_state()
+        """Snapshot `driver` + `params` under tag `next_round` (barrier
+        modes: the first round a resumed run will execute; async mode:
+        the snapshot index — resume continues mid-timeline)."""
+        arrays: Dict[str, Pytree] = {}
+        state = driver.checkpoint_state(arrays)
+        state["schema"] = SCHEMA_VERSION
         state["next_round"] = int(next_round)
-        save_pytree(params, str(self._params_path(next_round)))
-        self._state_path(next_round).write_text(json.dumps(state))
+        # the pair descriptor ties the two files of one save together:
+        # clock + charge count make it unique across re-saves of a tag
+        pair = {"schema": SCHEMA_VERSION, "tag": int(next_round),
+                "clock": float(driver.queue.clock.now),
+                "charges": int(driver.cost.invocations)}
+        state["pair"] = pair
+        state["array_keys"] = sorted(arrays)
+
+        entries = _flat_entries("params", params)
+        for key, tree in arrays.items():
+            entries.update(_flat_entries(f"extra{_SEP}{key}", tree))
+        entries[_META_KEY] = np.array(json.dumps(pair, sort_keys=True))
+        _atomic_write_npz(self._params_path(next_round), entries)
+        _atomic_write_text(self._state_path(next_round), json.dumps(state))
         self._gc()
         return self._state_path(next_round)
 
@@ -64,7 +140,9 @@ class RoundCheckpointer:
     def restore(self, driver, like_params: Pytree,
                 round_number: Optional[int] = None) -> Tuple[Pytree, int]:
         """Load the checkpoint (latest by default) into `driver` and
-        return ``(params, next_round)``."""
+        return ``(params, next_round)`` (async checkpoints return
+        ``next_round=0`` — the restored loop state carries the position).
+        """
         rnd = round_number if round_number is not None else self.latest_round()
         if rnd is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
@@ -77,9 +155,45 @@ class RoundCheckpointer:
                 raise ValueError(
                     f"checkpoint was written with {field}={want!r}, "
                     f"driver runs {have!r}")
-        params = load_pytree(str(self._params_path(rnd)), like_params)
-        driver.restore_state(state)
+        schema = int(state.get("schema", 1))
+        if schema > SCHEMA_VERSION:
+            raise ValueError(
+                f"checkpoint {self._state_path(rnd)} has schema {schema}; "
+                f"this build reads up to {SCHEMA_VERSION}")
+        if schema >= 2:
+            params, arrays = self._load_arrays(rnd, state, like_params)
+        else:
+            # schema v1 (PR 3): params-only npz, no timeline snapshot —
+            # restores with the old round-boundary semantics (in-flight
+            # invocations at the boundary lose their future arrival)
+            params, arrays = load_pytree(str(self._params_path(rnd)),
+                                         like_params), {}
+        driver.restore_state(state, arrays)
+        if "async" in state:
+            return params, 0
         return params, int(state["next_round"])
+
+    def _load_arrays(self, rnd: int, state: dict, like_params: Pytree):
+        data = np.load(self._params_path(rnd), allow_pickle=False)
+        if _META_KEY not in data:
+            raise ValueError(
+                f"checkpoint pair mismatch at tag {rnd}: "
+                f"{self._params_path(rnd).name} carries no pair "
+                f"descriptor (torn or foreign write)")
+        meta = json.loads(str(data[_META_KEY]))
+        if meta != state.get("pair"):
+            raise ValueError(
+                f"checkpoint pair mismatch at tag {rnd}: the .json and "
+                f".npz descriptors disagree ({state.get('pair')} vs "
+                f"{meta}) — the pair is torn (crash mid-write?); delete "
+                f"it or resume from an older tag")
+        params = _unflatten_like(data, "params", like_params)
+        # every extra tree shares the model-params structure (round
+        # params, cached client updates, pending/buffered updates)
+        arrays = {key: _unflatten_like(data, f"extra{_SEP}{key}",
+                                       like_params)
+                  for key in state.get("array_keys", [])}
+        return params, arrays
 
     # ---- internals ----------------------------------------------------
     def _params_path(self, rnd: int) -> Path:

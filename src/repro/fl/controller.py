@@ -45,7 +45,6 @@ unmodified on the new driver.
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -137,8 +136,14 @@ class _AsyncTicket:
     def __init__(self, client_id: str, version: int, deadline):
         self.client_id = client_id
         self.version = version          # model version the client trains on
-        self.deadline = deadline        # crash-detection ROUND_DEADLINE event
+        # crash-detection ROUND_DEADLINE event — None after a restore when
+        # the deadline had already fired (late-but-alive ticket)
+        self.deadline = deadline
         self.replaced = False           # slot already refilled at deadline?
+
+    def cancel_deadline(self) -> None:
+        if self.deadline is not None:
+            self.deadline.cancel()
 
 
 class TrainingDriver:
@@ -199,8 +204,13 @@ class TrainingDriver:
         self.engine = InvocationEngine(invoker, max_retries=max_retries,
                                        max_concurrency=max_concurrency,
                                        recorder=trace)
-        # barrier-free bookkeeping (tickets never collide with round ids)
-        self._tickets = itertools.count(start=1 << 20)
+        # barrier-free bookkeeping (tickets never collide with round ids);
+        # a plain int so the counter position is checkpointable
+        self._next_ticket = 1 << 20
+        # mid-run async state: live during _run_async (the checkpoint
+        # reads it), pre-loaded by restore_state for a resumed run
+        self._async_live: Optional[Dict[str, Any]] = None
+        self._async_resume: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------------
     def _evaluate(self, params: Pytree) -> float:
@@ -445,48 +455,71 @@ class TrainingDriver:
     # barrier-free path (async)
     # ------------------------------------------------------------------
     def _run_async(self, global_params: Pytree, n_rounds: int,
-                   verbose: bool = False) -> tuple:
+                   verbose: bool = False, checkpointer=None,
+                   checkpoint_every: float = 0.0) -> tuple:
         """Barrier-free loop: deliver `n_rounds × clients_per_round`
         updates (the same update budget a clean sync run would get),
-        emitting one RoundStats window per aggregation event."""
+        emitting one RoundStats window per aggregation event.
+
+        All loop state lives in one dict `S` so a checkpoint can snapshot
+        it between events: with a `checkpointer`, an event-horizon
+        snapshot is written every `checkpoint_every` *virtual seconds*
+        (there is no round boundary to count), and `restore_state`
+        pre-loads `S` for a resumed run to continue mid-timeline."""
         cohort_size = self.strategy.config.clients_per_round
-        target = n_rounds * cohort_size
         # the vmapped executor batches a round cohort; one-client tickets
         # have no cohort, so async always trains through the per-client
         # work_fn (vectorized is a barrier-mode knob)
-        result = ExperimentResult(strategy=self.strategy.name, mode=self.mode)
-        params = global_params
         clock = self.queue.clock
-
-        version = 0              # global model version (bumps per merge)
-        delivered_total = 0
-        next_eval = self.eval_every * cohort_size if self.eval_every else 0
-        tickets: Dict[int, _AsyncTicket] = {}
-        in_flight: set = set()
-
-        window = self._fresh_window(clock.now)
-
-        # hard budget so a fully-dead population terminates instead of
-        # probing forever: the queue drains once nothing new is issued
-        issue_budget = target * 20 + 10 * len(self.pool.client_ids)
-        issued_total = 0
+        S, self._async_resume = self._async_resume, None
+        if S is not None:
+            S["params"] = global_params      # restored by the checkpointer
+        else:
+            target = n_rounds * cohort_size
+            S = {
+                "target": target,
+                "version": 0,        # global model version (bumps per merge)
+                "delivered_total": 0,
+                "next_eval": (self.eval_every * cohort_size
+                              if self.eval_every else 0),
+                # hard budget so a fully-dead population terminates instead
+                # of probing forever: the queue drains once nothing new is
+                # issued
+                "issue_budget": (target * 20
+                                 + 10 * len(self.pool.client_ids)),
+                "issued_total": 0,
+                "snapshots": 0,
+                "tickets": {},       # tid -> _AsyncTicket
+                "in_flight": set(),
+                "window": self._fresh_window(clock.now),
+                "result": ExperimentResult(strategy=self.strategy.name,
+                                           mode=self.mode),
+                "params": global_params,
+            }
+        self._async_live = S
+        result = S["result"]
+        tickets: Dict[int, _AsyncTicket] = S["tickets"]
+        in_flight: set = S["in_flight"]
+        next_ckpt = (clock.now + checkpoint_every
+                     if checkpointer is not None and checkpoint_every > 0
+                     else None)
 
         def issue(cid: str, when: float) -> None:
-            nonlocal issued_total
-            if issued_total >= issue_budget:
+            if S["issued_total"] >= S["issue_budget"]:
                 return
-            issued_total += 1
-            tid = next(self._tickets)
+            S["issued_total"] += 1
+            tid = self._next_ticket
+            self._next_ticket += 1
             if self.trace is not None:
                 # attempt records join billing/aggregation on model version
-                self.trace.alias_round(tid, version)
-            self.engine.open_round(self.queue, [cid], params, tid, when)
+                self.trace.alias_round(tid, S["version"])
+            self.engine.open_round(self.queue, [cid], S["params"], tid, when)
             dl = self.queue.schedule(when + self.round_timeout_s,
                                      EventKind.ROUND_DEADLINE,
                                      round_number=tid)
-            tickets[tid] = _AsyncTicket(cid, version, dl)
+            tickets[tid] = _AsyncTicket(cid, S["version"], dl)
             in_flight.add(cid)
-            window["issued"].append(cid)
+            S["window"]["issued"].append(cid)
 
         def propose(want: int, now: float) -> List[str]:
             """Ask the Scheduler for the next slot fill(s): the eligible
@@ -494,8 +527,9 @@ class TrainingDriver:
             backoff, and any scoring live inside the scheduler."""
             eligible = [cid for cid in self.pool.client_ids
                         if cid not in in_flight]
-            picks = self.scheduler.propose(eligible, want, now, version)
-            self._record_scheduling(now, version, want, picks,
+            picks = self.scheduler.propose(eligible, want, now,
+                                           S["version"])
+            self._record_scheduling(now, S["version"], want, picks,
                                     len(eligible))
             return picks
 
@@ -505,7 +539,7 @@ class TrainingDriver:
 
         def close_window(now: float, merged: int,
                          aggregated: bool = True) -> None:
-            nonlocal window
+            window = S["window"]
             stats = RoundStats(
                 round_number=len(result.rounds),
                 selected=list(window["issued"]),
@@ -522,32 +556,39 @@ class TrainingDriver:
                 cost=self.cost.total - window["cost0"],
                 aggregated_updates=merged, retries=window["retries"],
                 straggler_arrivals=list(window["straggler_arrivals"]))
-            nonlocal next_eval
             if aggregated:
                 self._record_aggregation(now, stats.round_number, merged)
             # eval cadence matches the barrier modes: every eval_every
             # rounds' worth of delivered updates, not every window (a
             # FedAsync window is a single update)
-            if next_eval and delivered_total >= next_eval:
-                stats.accuracy = self._evaluate(params)
+            if S["next_eval"] and S["delivered_total"] >= S["next_eval"]:
+                stats.accuracy = self._evaluate(S["params"])
                 result.accuracy_curve.append((stats.round_number,
                                               stats.accuracy))
-                next_eval += self.eval_every * cohort_size
+                S["next_eval"] += self.eval_every * cohort_size
             result.rounds.append(stats)
             if verbose:
                 self._print_progress("merge", stats)
-            window = self._fresh_window(now)
+            S["window"] = self._fresh_window(now)
 
-        # honor the per-round in-flight cap in async mode too: the cap
-        # bounds the standing slot count (a late ticket's replacement can
-        # exceed it transiently, as in barrier mode's overlapping rounds)
-        slots = cohort_size
-        if self.engine.max_concurrency is not None:
-            slots = min(slots, self.engine.max_concurrency)
-        for cid in propose(slots, clock.now):
-            issue(cid, clock.now)
+        if S["issued_total"] == 0:
+            # fresh run: honor the per-round in-flight cap in async mode
+            # too — the cap bounds the standing slot count (a late
+            # ticket's replacement can exceed it transiently, as in
+            # barrier mode's overlapping rounds)
+            slots = cohort_size
+            if self.engine.max_concurrency is not None:
+                slots = min(slots, self.engine.max_concurrency)
+            for cid in propose(slots, clock.now):
+                issue(cid, clock.now)
 
-        while delivered_total < target:
+        while S["delivered_total"] < S["target"]:
+            if next_ckpt is not None and clock.now >= next_ckpt:
+                # event-horizon snapshot: between events, every layer's
+                # state is self-consistent (tickets, queue, engine, cost)
+                S["snapshots"] += 1
+                checkpointer.save(self, S["params"], S["snapshots"])
+                next_ckpt = clock.now + checkpoint_every
             ev = self.queue.pop()
             if ev is None:
                 break                       # population exhausted
@@ -556,7 +597,7 @@ class TrainingDriver:
             # then share the resolution-time version space with billing
             # records (the "ticket" field keeps the issue identity)
             if (self.trace is not None and ev.round_number in tickets):
-                self.trace.alias_round(ev.round_number, version)
+                self.trace.alias_round(ev.round_number, S["version"])
             if ev.kind is EventKind.ROUND_DEADLINE:
                 info = tickets.get(ev.round_number)
                 if info is None:
@@ -573,9 +614,9 @@ class TrainingDriver:
                     self.history.mark_miss(cid, info.version)
                     self.cost.charge_straggler(self.round_timeout_s,
                                                client_id=cid,
-                                               round_number=version)
+                                               round_number=S["version"])
                     self.scheduler.notify_miss(cid, ev.time)
-                    window["crashed"].append(cid)
+                    S["window"]["crashed"].append(cid)
                     refill(ev.time)
                 for cid in late:
                     # alive but slow: let it keep running — its update will
@@ -584,7 +625,7 @@ class TrainingDriver:
                     info.replaced = True
                     self.history.mark_miss(cid, info.version)
                     self.scheduler.notify_miss(cid, ev.time, crashed=False)
-                    window["late"].append(cid)
+                    S["window"]["late"].append(cid)
                     refill(ev.time)
                 continue
 
@@ -594,16 +635,16 @@ class TrainingDriver:
             info = tickets.pop(completion.round_number, None)
             if info is None:
                 continue                    # cross-mode leftovers
-            info.deadline.cancel()
+            info.cancel_deadline()
             cid = completion.client_id
             in_flight.discard(cid)
-            window["retries"] += completion.attempts - 1
+            S["window"]["retries"] += completion.attempts - 1
             # two number spaces, deliberately: charges key on the current
             # model version = the accumulating window's index (so
             # cost_by_round joins RoundStats.round_number), while history
             # keys on the ticket's *issue* version (what the client
             # actually trained against — the staleness base)
-            self._bill_attempts(completion, version)
+            self._bill_attempts(completion, S["version"])
 
             if not completion.success:
                 # paper §VI-C straggler convention, as in barrier mode:
@@ -612,39 +653,39 @@ class TrainingDriver:
                 # apples; the earlier retried attempts were billed above
                 self.cost.charge_straggler(self.round_timeout_s,
                                            client_id=cid,
-                                           round_number=version)
+                                           round_number=S["version"])
                 self.history.mark_miss(cid, info.version)
                 self.scheduler.notify_miss(cid, ev.time)
-                window["crashed"].append(cid)
+                S["window"]["crashed"].append(cid)
                 if not info.replaced:
                     refill(ev.time)
                 continue
 
             out = completion.outcome
             self.cost.charge(out.duration_s, client_id=cid,
-                             round_number=version)
+                             round_number=S["version"])
             # client-side report corrects the miss a late ticket recorded
             self.history.client_report(cid, info.version, out.duration_s)
             if not info.replaced:
                 self.history.mark_success(cid, info.version)
                 refill(ev.time)             # issue lands in this window
             else:
-                window["straggler_arrivals"].append(cid)
+                S["window"]["straggler_arrivals"].append(cid)
             # an arrived update clears the client's failure backoff
             self.scheduler.notify_finish(cid, ev.time,
                                          duration_s=out.duration_s,
                                          cold=out.cold,
                                          late=info.replaced)
 
-            delivered_total += 1
-            window["delivered"].append(cid)
+            S["delivered_total"] += 1
+            S["window"]["delivered"].append(cid)
             new_params = self.strategy.on_client_finish(
                 completion.update, arrival_time=ev.time,
-                producing_round=info.version, current_round=version,
-                global_params=params)
+                producing_round=info.version, current_round=S["version"],
+                global_params=S["params"])
             if new_params is not None:
-                params = new_params
-                version += 1
+                S["params"] = new_params
+                S["version"] += 1
                 close_window(ev.time, self.strategy.last_aggregate_count)
 
         # abandoned in-flight invocations are still launched work: the
@@ -652,31 +693,35 @@ class TrainingDriver:
         # and charge them before closing the books (they land in the
         # trailing accounting window)
         for tid, info in sorted(tickets.items()):
-            info.deadline.cancel()
+            info.cancel_deadline()
             if self.trace is not None:
-                self.trace.alias_round(tid, version)
+                self.trace.alias_round(tid, S["version"])
             for cid, billed_s in self.engine.drain_round(tid, clock.now):
                 self.cost.charge(billed_s, client_id=cid,
-                                 round_number=version, kind="abandoned")
+                                 round_number=S["version"],
+                                 kind="abandoned")
         tickets.clear()
 
         # flush partially-buffered strategy state (FedBuff's trailing <K
         # buffer) so every delivered update reaches the final model …
-        final = self.strategy.finalize(params, current_round=version)
+        final = self.strategy.finalize(S["params"],
+                                       current_round=S["version"])
         if final is not None:
-            params = final
-            version += 1
+            S["params"] = final
+            S["version"] += 1
             close_window(clock.now, self.strategy.last_aggregate_count)
-        elif (window["delivered"] or window["crashed"] or window["late"]
-                or self.cost.total > window["cost0"]):
+        elif (S["window"]["delivered"] or S["window"]["crashed"]
+                or S["window"]["late"]
+                or self.cost.total > S["window"]["cost0"]):
             # … and account the trailing activity (charges, deliveries,
             # crash probes) that landed after the last aggregation event
             close_window(clock.now, 0, aggregated=False)
 
-        result.final_accuracy = self._evaluate(params)
+        result.final_accuracy = self._evaluate(S["params"])
         result.cost_by_client = dict(self.cost.by_client)
         result.cost_by_round = dict(self.cost.rounds)
-        return params, result
+        self._async_live = None
+        return S["params"], result
 
     def _fresh_window(self, now: float) -> Dict[str, Any]:
         return {"start": now, "issued": [], "delivered": [], "late": [],
@@ -686,21 +731,28 @@ class TrainingDriver:
     # ------------------------------------------------------------------
     # checkpoint surface (fl/checkpointing.py)
     # ------------------------------------------------------------------
-    def checkpoint_state(self) -> dict:
-        """Round-boundary snapshot of the driver's mutable state: history,
-        every RNG stream (driver, strategy, platform), scheduler state,
-        cost-meter tallies, the virtual clock, and the trailing RoundStats
-        telemetry.  Together with the round-tagged global params this is
-        enough for a resumed run to replay the remaining rounds exactly —
-        as long as no invocation spans the checkpoint boundary (an
-        in-flight straggler's future arrival is dropped on restore; its
-        billing up to the boundary was already recorded).  The barrier-free
-        mode has no round boundaries to snapshot at and is not supported.
+    def checkpoint_state(self, arrays: Optional[Dict[str, Any]] = None
+                         ) -> dict:
+        """Full-fidelity snapshot of the driver's mutable state.
+
+        Beyond the round-boundary state (history, every RNG stream,
+        scheduler state, cost tallies, virtual clock, trailing RoundStats
+        telemetry), the snapshot captures the *pending timeline*: every
+        live event in the queue with its seq counter, the engine's
+        in-flight invocations (plans, retry counters, cached updates),
+        warm-instance pools (single platform or the whole fleet), rolling
+        routing telemetry, and the semi-async/FedBuff update buffers.  A
+        restored run therefore replays the remaining events byte-
+        identically to an uninterrupted same-seed run — in-flight
+        stragglers included — which is also what makes the barrier-free
+        mode checkpointable: `_run_async` exposes its loop state here and
+        snapshots at event horizons instead of round boundaries.
+
+        Pytree-valued state (per-round global params, cached client
+        updates, pending/buffered updates) is deposited into `arrays`;
+        the checkpointer saves it alongside the global params.
         """
-        if self.mode == "async":
-            raise NotImplementedError(
-                "checkpoint/resume covers the barrier modes; the async "
-                "driver has no round boundary to snapshot at")
+        arrays = {} if arrays is None else arrays
         state = {
             "mode": self.mode,
             "strategy": self.strategy.name,
@@ -708,60 +760,142 @@ class TrainingDriver:
             "clock": self.queue.clock.now,
             "history": self.history.to_payload(),
             "driver_rng": self.rng.bit_generator.state,
-            "strategy_rng": self.strategy.rng.bit_generator.state,
+            "strategy_state": self.strategy.state_dict(arrays),
             "scheduler": self.scheduler.state_dict(),
-            "cost": {"total": self.cost.total,
-                     "invocations": self.cost.invocations,
-                     "by_client": dict(self.cost.by_client),
-                     "rounds": {str(k): v
-                                for k, v in self.cost.rounds.items()}},
+            "cost": self.cost.state_dict(),
             "recent_stats": [asdict(r) for r in self._recent_stats],
+            "queue": self.queue.state_dict(),
+            "engine": self.engine.state_dict(arrays),
+            "next_ticket": self._next_ticket,
         }
-        if self.cost.allowance is not None:
-            # free-tier billing: the remaining monthly grant is part of
-            # the cost state (a resumed run must not re-grant it)
-            a = self.cost.allowance
-            state["cost"]["allowance"] = {
-                "invocations": a.invocations,
-                "vcpu_seconds": a.vcpu_seconds,
-                "gib_seconds": a.gib_seconds,
-            }
-        if hasattr(self.platform, "state_dict"):
+        fleet = getattr(self.invoker, "fleet", None)
+        if fleet is not None:
+            # multi-provider runs: every platform's RNG/warm pool plus
+            # the routing decisions, not just the default platform
+            state["fleet"] = fleet.state_dict()
+        elif hasattr(self.platform, "state_dict"):
             state["platform"] = self.platform.state_dict()
+        if self.trace is not None:
+            state["telemetry"] = self.trace.telemetry_state_dict()
+            state["trace_offset"] = len(self.trace.records)
+        if self.mode == "async":
+            state["async"] = self._async_checkpoint_state()
         return state
 
-    def restore_state(self, state: dict) -> None:
+    def _async_checkpoint_state(self) -> dict:
+        """Snapshot `_run_async`'s live loop state (event-horizon path)."""
+        S = self._async_live
+        if S is None:
+            raise RuntimeError(
+                "async checkpoints are event-horizon snapshots taken "
+                "inside a running _run_async loop (checkpoint_every "
+                "virtual seconds); there is no driver-idle state to save")
+        result: ExperimentResult = S["result"]
+        return {
+            "target": S["target"], "version": S["version"],
+            "delivered_total": S["delivered_total"],
+            "next_eval": S["next_eval"],
+            "issue_budget": S["issue_budget"],
+            "issued_total": S["issued_total"],
+            "snapshots": S["snapshots"],
+            "in_flight": sorted(S["in_flight"]),
+            "tickets": {str(tid): {
+                "client_id": t.client_id, "version": t.version,
+                "replaced": t.replaced,
+                "deadline_seq": (None if t.deadline is None
+                                 or t.deadline.cancelled
+                                 else t.deadline.seq)}
+                for tid, t in S["tickets"].items()},
+            "window": S["window"],
+            "rounds": [asdict(r) for r in result.rounds],
+            "accuracy_curve": [list(t) for t in result.accuracy_curve],
+        }
+
+    def restore_state(self, state: dict,
+                      arrays: Optional[Dict[str, Any]] = None) -> None:
         """Inverse of `checkpoint_state` (same driver wiring assumed)."""
+        arrays = {} if arrays is None else arrays
         self.queue.clock.advance_to(float(state["clock"]))
+        events_by_seq = self.queue.load_state_dict(state.get("queue", {}))
+        self.engine.load_state_dict(state.get("engine", {}), events_by_seq,
+                                    arrays)
         self.history.load_payload(state["history"])
         self.rng.bit_generator.state = state["driver_rng"]
-        self.strategy.rng.bit_generator.state = state["strategy_rng"]
+        if "strategy_state" in state:
+            self.strategy.load_state_dict(state["strategy_state"], arrays)
+        elif "strategy_rng" in state:     # schema-v1 checkpoints
+            self.strategy.rng.bit_generator.state = state["strategy_rng"]
         self.scheduler.load_state_dict(state.get("scheduler", {}))
-        cost = state.get("cost", {})
-        self.cost.total = float(cost.get("total", 0.0))
-        self.cost.invocations = int(cost.get("invocations", 0))
-        self.cost.by_client = dict(cost.get("by_client", {}))
-        self.cost.rounds = {int(k): v
-                            for k, v in cost.get("rounds", {}).items()}
-        if "allowance" in cost and self.cost.allowance is not None:
-            for attr, left in cost["allowance"].items():
-                setattr(self.cost.allowance, attr, float(left))
+        self.cost.load_state_dict(state.get("cost", {}))
         self._recent_stats = [RoundStats(**d)
                               for d in state.get("recent_stats", [])]
-        if "platform" in state and hasattr(self.platform, "load_state_dict"):
+        self._next_ticket = int(state.get("next_ticket", self._next_ticket))
+        fleet = getattr(self.invoker, "fleet", None)
+        if "fleet" in state and fleet is not None:
+            fleet.load_state_dict(state["fleet"])
+        elif "platform" in state and hasattr(self.platform,
+                                             "load_state_dict"):
             self.platform.load_state_dict(state["platform"])
+        if "telemetry" in state and self.trace is not None:
+            self.trace.load_telemetry_state(state["telemetry"])
+        if "async" in state:
+            self._async_resume = self._rebuild_async(state["async"],
+                                                     events_by_seq)
+
+    def _rebuild_async(self, a: dict, events_by_seq: dict) -> dict:
+        """Rebuild `_run_async`'s loop state from its snapshot, re-linking
+        ticket deadlines to the restored queue's event objects (a ticket
+        whose deadline already fired — late-but-alive — gets None)."""
+        result = ExperimentResult(strategy=self.strategy.name,
+                                  mode=self.mode)
+        result.rounds = [RoundStats(**d) for d in a.get("rounds", [])]
+        result.accuracy_curve = [tuple(t)
+                                 for t in a.get("accuracy_curve", [])]
+        tickets: Dict[int, _AsyncTicket] = {}
+        for tid, t in a.get("tickets", {}).items():
+            seq = t.get("deadline_seq")
+            ticket = _AsyncTicket(t["client_id"], int(t["version"]),
+                                  events_by_seq.get(seq)
+                                  if seq is not None else None)
+            ticket.replaced = bool(t.get("replaced", False))
+            tickets[int(tid)] = ticket
+        window = dict(a.get("window", {}))
+        return {
+            "target": int(a["target"]), "version": int(a["version"]),
+            "delivered_total": int(a["delivered_total"]),
+            "next_eval": a.get("next_eval", 0),
+            "issue_budget": int(a["issue_budget"]),
+            "issued_total": int(a["issued_total"]),
+            "snapshots": int(a.get("snapshots", 0)),
+            "tickets": tickets,
+            "in_flight": set(a.get("in_flight", [])),
+            "window": window,
+            "result": result,
+        }
 
     # ------------------------------------------------------------------
     def run(self, global_params: Pytree, n_rounds: int,
             verbose: bool = False, start_round: int = 0,
-            checkpointer=None, checkpoint_every: int = 0) -> tuple:
+            checkpointer=None, checkpoint_every: float = 0) -> tuple:
         if self.mode == "async":
-            if start_round or checkpointer is not None:
-                raise ValueError("checkpoint/resume is a barrier-mode "
-                                 "feature (async runs are continuous)")
-            return self._run_async(global_params, n_rounds, verbose=verbose)
+            if start_round:
+                raise ValueError(
+                    "start_round is a barrier-mode concept; async resume "
+                    "restores mid-timeline state via "
+                    "RoundCheckpointer.restore")
+            # async cadence: checkpoint_every is in *virtual seconds*
+            return self._run_async(global_params, n_rounds, verbose=verbose,
+                                   checkpointer=checkpointer,
+                                   checkpoint_every=float(checkpoint_every
+                                                          or 0.0))
         result = ExperimentResult(strategy=self.strategy.name, mode=self.mode)
         params = global_params
+        ck_every = int(checkpoint_every or 0)
+        if ck_every != (checkpoint_every or 0):
+            raise ValueError(
+                f"checkpoint_every={checkpoint_every!r} must be a whole "
+                f"number of rounds in barrier modes (virtual seconds are "
+                f"an async-mode unit)")
         for rnd in range(start_round, n_rounds):
             params, stats = self.run_round(params, rnd)
             if self.eval_every and (rnd + 1) % self.eval_every == 0:
@@ -770,8 +904,8 @@ class TrainingDriver:
             result.rounds.append(stats)
             if verbose:
                 self._print_progress("round", stats)
-            if (checkpointer is not None and checkpoint_every
-                    and (rnd + 1) % checkpoint_every == 0):
+            if (checkpointer is not None and ck_every
+                    and (rnd + 1) % ck_every == 0):
                 checkpointer.save(self, params, rnd + 1)
         result.final_accuracy = self._evaluate(params)
         result.cost_by_client = dict(self.cost.by_client)

@@ -68,12 +68,14 @@ class ExperimentConfig:
     # make_scheduler ("random", "fedlesscan", "apodotiko", "adaptive",
     # "rotation") overrides the cohort policy in any mode
     scheduler: Optional[str] = None
-    # checkpoint/resume surface (fl/checkpointing.py, barrier modes):
-    # write a round-tagged checkpoint every `checkpoint_every` rounds to
-    # `checkpoint_dir`; `resume_from` restores the latest checkpoint in
-    # a directory and runs only the remaining rounds
+    # checkpoint/resume surface (fl/checkpointing.py, all three modes):
+    # write a full-fidelity snapshot to `checkpoint_dir` every
+    # `checkpoint_every` rounds (barrier modes) or virtual *seconds*
+    # (async mode — there is no round boundary); `resume_from` restores
+    # the latest checkpoint in a directory and replays the remaining
+    # timeline exactly, in-flight invocations included
     checkpoint_dir: Optional[str] = None
-    checkpoint_every: int = 0
+    checkpoint_every: float = 0
     resume_from: Optional[str] = None
     # barrier-free strategy knobs (core/strategies.StrategyConfig)
     buffer_k: int = 4

@@ -1,18 +1,22 @@
 """Checkpoint/resume of the training driver (fl/checkpointing.py).
 
-The core guarantee: a run resumed from a round-tagged checkpoint
-replays the remaining rounds *exactly* as the uninterrupted run —
-same cohorts, same virtual timings, same params — because the
-checkpoint captures every mutable stream (history, driver/strategy/
-platform RNGs, scheduler state, cost tallies, virtual clock).
+The core guarantee (schema v2): a checkpoint is a **full event-queue
+snapshot** — pending events with their seq counter, in-flight engine
+state (plans, retry counters, cached updates), warm pools, routing
+telemetry, cost tallies, every RNG stream — so a resumed run replays
+the remaining timeline *byte-identically* to an uninterrupted same-seed
+run, in-flight stragglers included, in all three training modes.
 """
-import jax
+import json
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import ClientHistoryDB, ClientUpdate, StrategyConfig, make_strategy
 from repro.faas import CostMeter, FaaSConfig, MockInvoker, SimulatedFaaSPlatform
+from repro.faas.platform import ClientProfile
+from repro.faas.trace import TraceRecorder
 from repro.fl.checkpointing import RoundCheckpointer
 from repro.fl.controller import TrainingDriver
 
@@ -34,27 +38,40 @@ class _StubPool:
         return self._ids
 
 
-def _driver(strategy_name="fedlesscan", seed=0):
+def _driver(strategy_name="fedlesscan", seed=0, profiles=None, trace=None,
+            round_timeout_s=60.0, clients_per_round=3):
     history = ClientHistoryDB()
     history.ensure(IDS)
     strategy = make_strategy(
-        strategy_name, StrategyConfig(clients_per_round=3, max_rounds=10),
+        strategy_name,
+        StrategyConfig(clients_per_round=clients_per_round, max_rounds=10),
         history, seed=seed)
     # jitter + stochastic cold starts exercise the platform RNG stream
     platform = SimulatedFaaSPlatform(
         FaaSConfig(cold_start_median_s=2.0, cold_start_sigma=0.3,
                    perf_variation=(0.9, 1.1), failure_rate=0.0,
                    network_jitter_s=0.4),
-        seed=seed)
-    invoker = MockInvoker(platform, _work_fn, {})
+        seed=seed, recorder=trace)
+    invoker = MockInvoker(platform, _work_fn, profiles or {})
     return TrainingDriver(strategy, invoker, _StubPool(IDS), history,
-                          CostMeter(), round_timeout_s=60.0, eval_every=0,
-                          seed=seed)
+                          CostMeter(trace=trace),
+                          round_timeout_s=round_timeout_s,
+                          eval_every=0, seed=seed, trace=trace)
 
 
 def _round_key(stats):
     return (stats.round_number, stats.selected, stats.successes, stats.late,
             stats.crashed, stats.duration_s, stats.eur, stats.cost)
+
+
+def _lines(recorder):
+    return [json.dumps(r, sort_keys=True) for r in recorder.records]
+
+
+# slow enough to miss a 60 s round (10 s work × 8 + cold + jitter ≈ 83 s)
+# but to finish mid-flight one or two rounds later
+SPAN_PROFILES = {cid: ClientProfile(slow_factor=8.0)
+                 for cid in ("c0", "c1", "c2")}
 
 
 def test_resumed_run_matches_uninterrupted(tmp_path):
@@ -86,6 +103,118 @@ def test_resumed_run_matches_uninterrupted(tmp_path):
     assert resumed.history.to_payload() == ref.history.to_payload()
 
 
+def _interrupt_resume_traces(tmp_path, strategy_name, profiles):
+    """Run 6 rounds uninterrupted vs 2-rounds + resume; return both sides'
+    artifacts for byte-level comparison."""
+    ref_trace = TraceRecorder()
+    ref = _driver(strategy_name, profiles=dict(profiles), trace=ref_trace)
+    ref_params, ref_res = ref.run({"w": jnp.zeros(4)}, 6)
+
+    t1 = TraceRecorder()
+    first = _driver(strategy_name, profiles=dict(profiles), trace=t1)
+    ckpt = RoundCheckpointer(tmp_path / "ckpt")
+    _, _ = first.run({"w": jnp.zeros(4)}, 2,
+                     checkpointer=ckpt, checkpoint_every=2)
+
+    t2 = TraceRecorder()
+    resumed = _driver(strategy_name, profiles=dict(profiles), trace=t2)
+    params0, next_round = ckpt.restore(resumed, {"w": jnp.zeros(4)})
+    assert next_round == 2
+    tail_params, _ = resumed.run(params0, 6, start_round=next_round)
+    state = json.loads((tmp_path / "ckpt" / "round_000002.json").read_text())
+    return ref, ref_params, ref_trace, resumed, tail_params, t1, t2, state
+
+
+def test_semi_async_resume_with_inflight_straggler_is_byte_identical(tmp_path):
+    """The headline fix: an invocation *spanning* the checkpoint boundary
+    survives the restore — its CLIENT_FINISH replays at its true virtual
+    time and the JSONL traces concatenate byte-identically."""
+    (ref, ref_params, ref_trace, resumed, tail_params,
+     t1, t2, state) = _interrupt_resume_traces(tmp_path, "fedlesscan",
+                                               SPAN_PROFILES)
+    # the snapshot really did capture an in-flight straggler
+    pending_kinds = {ev["kind"] for ev in state["queue"]["events"]}
+    assert "client_finish" in pending_kinds
+    assert state["engine"]["rounds"], "no in-flight engine state captured"
+
+    assert np.array_equal(np.asarray(tail_params["w"]),
+                          np.asarray(ref_params["w"]))
+    assert _lines(t1) + _lines(t2) == _lines(ref_trace)
+    assert resumed.history.to_payload() == ref.history.to_payload()
+    # cost attribution: int round keys and identical per-round totals
+    assert all(isinstance(k, int) for k in resumed.cost.rounds)
+    assert resumed.cost.rounds == ref.cost.rounds
+    assert resumed.cost.by_client == ref.cost.by_client
+
+
+def test_sync_resume_with_inflight_straggler_is_byte_identical(tmp_path):
+    """Sync mode discards the late update, but the event still arrives,
+    is billed, and must replay identically after a resume."""
+    (ref, ref_params, ref_trace, resumed, tail_params,
+     t1, t2, state) = _interrupt_resume_traces(tmp_path, "fedavg",
+                                               SPAN_PROFILES)
+    assert np.array_equal(np.asarray(tail_params["w"]),
+                          np.asarray(ref_params["w"]))
+    assert _lines(t1) + _lines(t2) == _lines(ref_trace)
+    assert resumed.cost.rounds == ref.cost.rounds
+
+
+@pytest.mark.parametrize("strategy_name", ["fedasync", "fedbuff"])
+def test_async_resume_is_byte_identical(tmp_path, strategy_name):
+    """Async mode checkpoints at event horizons (checkpoint_every virtual
+    seconds) and a restore continues the barrier-free timeline exactly —
+    including FedBuff's partially-filled buffer."""
+    profiles = {"c0": ClientProfile(slow_factor=8.0)}
+    ck = RoundCheckpointer(tmp_path / "ck", keep=50)
+
+    ref_trace = TraceRecorder()
+    ref = _driver(strategy_name, profiles=dict(profiles), trace=ref_trace)
+    ref_params, ref_res = ref.run({"w": jnp.zeros(4)}, 4,
+                                  checkpointer=ck, checkpoint_every=15.0)
+    tags = ck.rounds()
+    assert len(tags) >= 2, "expected several event-horizon snapshots"
+
+    # pick a mid-run snapshot and continue from it with a fresh driver
+    tag = tags[len(tags) // 2]
+    state = json.loads((tmp_path / "ck" / f"round_{tag:06d}.json")
+                       .read_text())
+    offset = state["trace_offset"]
+    assert state["async"]["tickets"], "snapshot should hold open tickets"
+
+    t2 = TraceRecorder()
+    resumed = _driver(strategy_name, profiles=dict(profiles), trace=t2)
+    params0, next_round = ck.restore(resumed, {"w": jnp.zeros(4)},
+                                     round_number=tag)
+    assert next_round == 0
+    tail_params, tail_res = resumed.run(params0, 4)
+
+    assert np.array_equal(np.asarray(tail_params["w"]),
+                          np.asarray(ref_params["w"]))
+    # the resumed trace is exactly the reference trace's tail
+    assert _lines(t2) == _lines(ref_trace)[offset:]
+    # the resumed result carries the pre-checkpoint windows too
+    assert [_round_key(r) for r in tail_res.rounds] == \
+        [_round_key(r) for r in ref_res.rounds]
+    assert resumed.cost.total == pytest.approx(ref.cost.total, abs=1e-12)
+    assert all(isinstance(k, int) for k in resumed.cost.rounds)
+    assert resumed.cost.rounds == ref.cost.rounds
+
+
+def test_async_checkpointer_is_side_effect_free(tmp_path):
+    """A run that writes snapshots must be indistinguishable from one
+    that doesn't (saving reads state, never mutates it)."""
+    profiles = {"c0": ClientProfile(slow_factor=8.0)}
+    plain = _driver("fedasync", profiles=dict(profiles))
+    p1, r1 = plain.run({"w": jnp.zeros(4)}, 3)
+    ck = RoundCheckpointer(tmp_path / "ck", keep=50)
+    saving = _driver("fedasync", profiles=dict(profiles))
+    p2, r2 = saving.run({"w": jnp.zeros(4)}, 3,
+                        checkpointer=ck, checkpoint_every=10.0)
+    assert np.array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+    assert [_round_key(r) for r in r1.rounds] == \
+        [_round_key(r) for r in r2.rounds]
+
+
 def test_checkpointer_retention_and_latest(tmp_path):
     d = _driver()
     ckpt = RoundCheckpointer(tmp_path / "ckpt", keep=2)
@@ -95,6 +224,67 @@ def test_checkpointer_retention_and_latest(tmp_path):
         ckpt.save(d, params, rnd + 1)
     assert ckpt.rounds() == [3, 4]           # retention pruned 1 and 2
     assert ckpt.latest_round() == 4
+
+
+def test_checkpoint_writes_are_atomic(tmp_path):
+    d = _driver()
+    ckpt = RoundCheckpointer(tmp_path / "ckpt")
+    params, _ = d.run_round({"w": jnp.zeros(4)}, 0)
+    ckpt.save(d, params, 1)
+    # no temp litter: both files landed via os.replace
+    assert sorted(p.name for p in (tmp_path / "ckpt").iterdir()) == \
+        ["round_000001.json", "round_000001.npz"]
+
+
+def test_restore_rejects_torn_pair(tmp_path):
+    """A .json/.npz pair whose descriptors disagree (crash between the
+    two replaces, or a foreign overwrite) must fail loudly, not resume."""
+    d = _driver()
+    ckpt = RoundCheckpointer(tmp_path / "ckpt")
+    params, _ = d.run_round({"w": jnp.zeros(4)}, 0)
+    ckpt.save(d, params, 1)
+    spath = tmp_path / "ckpt" / "round_000001.json"
+    state = json.loads(spath.read_text())
+    state["pair"]["charges"] += 1            # simulate a torn pair
+    spath.write_text(json.dumps(state))
+    other = _driver()
+    with pytest.raises(ValueError, match="pair mismatch"):
+        ckpt.restore(other, {"w": jnp.zeros(4)})
+
+
+def test_schema_v1_checkpoint_migrates(tmp_path):
+    """PR 3 checkpoints (no schema field, params-only npz, strategy_rng
+    key) still restore — with their documented round-boundary semantics."""
+    from repro.checkpoint.checkpoint import save_pytree
+
+    d = _driver()
+    params, _ = d.run_round({"w": jnp.zeros(4)}, 0)
+    state = {
+        "mode": d.mode, "strategy": d.strategy.name,
+        "scheduler_name": d.scheduler.name,
+        "clock": d.queue.clock.now,
+        "history": d.history.to_payload(),
+        "driver_rng": d.rng.bit_generator.state,
+        "strategy_rng": d.strategy.rng.bit_generator.state,
+        "scheduler": d.scheduler.state_dict(),
+        "cost": {"total": d.cost.total, "invocations": d.cost.invocations,
+                 "by_client": dict(d.cost.by_client),
+                 "rounds": {str(k): v for k, v in d.cost.rounds.items()}},
+        "recent_stats": [], "next_round": 1,
+    }
+    ckdir = tmp_path / "ckpt"
+    ckdir.mkdir()
+    save_pytree(params, str(ckdir / "round_000001.npz"))
+    (ckdir / "round_000001.json").write_text(json.dumps(state))
+
+    resumed = _driver()
+    params0, next_round = RoundCheckpointer(ckdir).restore(
+        resumed, {"w": jnp.zeros(4)})
+    assert next_round == 1
+    assert np.array_equal(np.asarray(params0["w"]), np.asarray(params["w"]))
+    assert len(resumed.queue) == 0           # v1: no timeline snapshot
+    assert resumed.cost.total == pytest.approx(d.cost.total)
+    assert all(isinstance(k, int) for k in resumed.cost.rounds)
 
 
 def test_restore_rejects_strategy_mismatch(tmp_path):
@@ -152,14 +342,6 @@ def test_free_tier_allowance_survives_resume(tmp_path):
     ckpt.restore(resumed, {"w": jnp.zeros(4)})
     assert resumed.cost.allowance.vcpu_seconds == consumed
     assert resumed.cost.allowance.vcpu_seconds < 180_000.0
-
-
-def test_async_driver_refuses_checkpoint():
-    d = _driver("fedasync")
-    with pytest.raises(NotImplementedError, match="barrier"):
-        d.checkpoint_state()
-    with pytest.raises(ValueError, match="barrier"):
-        d.run({"w": jnp.zeros(4)}, 1, start_round=1)
 
 
 def test_experiment_resume_surface(tmp_path):

@@ -6,6 +6,8 @@ with the per-client loop, and the acceptance scenario — a straggler's
 update from round t arriving and aggregating at its true virtual arrival
 time during round t+1.
 """
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -80,6 +82,71 @@ def test_event_queue_cancel_skips_and_preserves_len():
     assert q.pop() is keep
     # cancelled event never advanced the clock
     assert q.clock.now == 2.0
+
+
+def test_event_queue_len_stays_exact_under_heavy_cancellation():
+    """`len`/`bool` are O(1) counters maintained by schedule/cancel/pop;
+    compaction under tombstone-heavy loads must not disturb ordering."""
+    q = EventQueue(VirtualClock())
+    events = [q.schedule(float(i), EventKind.CLIENT_FINISH,
+                         client_id=f"c{i}") for i in range(300)]
+    for ev in events[::2]:
+        ev.cancel()                       # 150 tombstones → compaction
+    assert len(q) == 150
+    ev = events[1]
+    ev.cancel()
+    ev.cancel()                           # double-cancel counted once
+    assert len(q) == 149
+    assert bool(q)
+    popped = []
+    while q:
+        popped.append(q.pop())
+    assert len(popped) == 149
+    assert q.pop() is None
+    assert len(q) == 0 and not q
+    assert popped == sorted(popped, key=lambda e: (e.time, e.seq))
+
+
+def test_cancel_after_pop_does_not_corrupt_len():
+    """Handles to already-delivered events get cancelled on ordinary
+    paths (a fired async deadline at late arrival, close_round over a
+    resolved lifecycle's COLD_START_DONE) — that must not decrement the
+    live counter a second time."""
+    q = EventQueue(VirtualClock())
+    fired = q.schedule(1.0, EventKind.ROUND_DEADLINE)
+    pending = q.schedule(2.0, EventKind.CLIENT_FINISH, client_id="c")
+    assert q.pop() is fired
+    fired.cancel()                        # stale handle, already delivered
+    fired.cancel()
+    assert len(q) == 1 and bool(q)
+    assert q.pop() is pending
+    assert len(q) == 0
+
+
+def test_event_queue_snapshot_roundtrip():
+    """state_dict/load_state_dict replay the pending timeline with the
+    original seqs, skip cancelled events, and keep counting seqs past
+    the old counter."""
+    q = EventQueue(VirtualClock())
+    a = q.schedule(5.0, EventKind.CLIENT_FINISH, client_id="a",
+                   round_number=3)
+    b = q.schedule(1.0, EventKind.WARM_EXPIRY, client_id="b",
+                   platform="gcf-gen2")
+    dropped = q.schedule(2.0, EventKind.ROUND_DEADLINE)
+    dropped.cancel()
+    state = q.state_dict()
+
+    q2 = EventQueue(VirtualClock())
+    by_seq = q2.load_state_dict(json.loads(json.dumps(state)))
+    assert set(by_seq) == {a.seq, b.seq}
+    assert len(q2) == 2
+    first = q2.pop()
+    assert (first.seq, first.kind, first.data) == \
+        (b.seq, EventKind.WARM_EXPIRY, {"platform": "gcf-gen2"})
+    nxt = q2.schedule(9.0, EventKind.ROUND_DEADLINE)
+    assert nxt.seq == dropped.seq + 1     # counter continued, not reset
+    last = q2.pop()
+    assert (last.seq, last.round_number) == (a.seq, 3)
 
 
 # ---------------------------------------------------------------- warm pool
