@@ -55,10 +55,11 @@ class FedLesScanNoLate(FedLesScan):
     name = "fedlesscan-nolate"
     semi_async = False
 
-    def aggregate(self, updates, round_number, now=None):
+    def aggregate(self, updates, round_number, now=None,
+                  global_params=None):
         from repro.core.aggregation import staleness_aggregate
         if not updates:
-            return None
+            return global_params
         return staleness_aggregate(list(updates), round_number,
                                    tau=self.config.tau)
 

@@ -1,0 +1,96 @@
+"""Server-optimizer benchmark — 4 merge-pipeline optimizers × 3
+straggler ratios.
+
+Companion to ``bench_scheduler.py``: every cell runs the same semi-async
+FedLesScan experiment on the same seed/task/straggler profile and varies
+only the `MergePipeline`'s server optimizer (core/merge.py), so the JSON
+isolates the server-side update rule's contribution to accuracy under
+increasingly noisy, staleness-damped pseudo-gradients.  Results land in
+``results/BENCH_server_opt.json`` (uploaded as a CI artifact).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_server_opt``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.data import label_sorted_shards, make_image_classification
+from repro.data.synthetic import ArrayDataset
+from repro.fl.experiment import (ExperimentConfig, ScenarioConfig,
+                                 run_experiment)
+from repro.fl.tasks import ClassificationTask, TaskConfig
+from repro.models.small import make_cnn
+
+SERVER_OPTS = ("sgd", "fedavgm", "fedadam", "fedyogi")
+# adaptive families take a smaller server step than the identity replace
+OPT_LR = {"sgd": 1.0, "fedavgm": 0.9, "fedadam": 0.1, "fedyogi": 0.1}
+RATIOS = (0.0, 0.3, 0.5)
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+OUT = RESULTS / "BENCH_server_opt.json"
+
+N_CLIENTS = 18
+N_ROUNDS = 8
+COHORT = 6
+
+
+def _setup(seed: int = 0):
+    full = make_image_classification(1000, image_size=14, n_classes=5,
+                                     seed=seed)
+    train = ArrayDataset(full.x[:850], full.y[:850])
+    test = ArrayDataset(full.x[850:], full.y[850:])
+    parts = label_sorted_shards(train, N_CLIENTS, 2, seed=seed)
+    test_parts = label_sorted_shards(test, N_CLIENTS, 2, seed=seed)
+    task = ClassificationTask(
+        make_cnn(14, 1, 5, 32, "bench_srvopt_cnn"),
+        TaskConfig(epochs=1, batch_size=32, per_sample_time_s=0.05))
+    return task, parts, test_parts
+
+
+def run_bench(rounds: int = N_ROUNDS, seed: int = 0) -> dict:
+    task, parts, test_parts = _setup(seed)
+    grid: dict = {}
+    for server_opt in SERVER_OPTS:
+        for ratio in RATIOS:
+            cfg = ExperimentConfig(
+                strategy="fedlesscan", n_rounds=rounds,
+                clients_per_round=COHORT, eval_every=0, seed=seed,
+                server_opt=server_opt,
+                server_opt_lr=OPT_LR[server_opt],
+                scenario=ScenarioConfig(straggler_fraction=ratio,
+                                        round_timeout_s=30.0, seed=seed))
+            t0 = time.perf_counter()
+            res = run_experiment(task, parts, test_parts, cfg)
+            wall_s = time.perf_counter() - t0
+            key = f"{server_opt}@{ratio}"
+            grid[key] = {
+                "server_opt": server_opt, "ratio": ratio,
+                "server_opt_lr": OPT_LR[server_opt],
+                "accuracy": res.final_accuracy,
+                "eur": res.mean_eur,
+                "duration_s": res.total_duration_s,
+                "cost_usd": res.total_cost,
+                "wall_s": round(wall_s, 3),
+            }
+            print(f"{key:18s} acc={res.final_accuracy:.3f} "
+                  f"eur={res.mean_eur:.2f} "
+                  f"dur={res.total_duration_s:7.1f}s "
+                  f"cost=${res.total_cost:.4f}")
+    return grid
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=N_ROUNDS)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    grid = run_bench(rounds=args.rounds, seed=args.seed)
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(grid, indent=1))
+    print(f"\nwrote {OUT} ({len(grid)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,14 @@ billing charge, and aggregation event) to results/async_study/, and the
 first async strategy is run twice to demonstrate byte-identical traces —
 virtual-clock determinism survives the barrier-free mode.
 
+``--server-opt`` adds a sweep column: every strategy is additionally run
+with each named server optimizer on the merge pipeline (core/merge.py),
+so the table shows e.g. how FedAdam/FedYogi server updates interact with
+staleness-damped async pseudo-gradients.
+
     PYTHONPATH=src python examples/async_study.py [--ratio 0.3 --rounds 8]
+    PYTHONPATH=src python examples/async_study.py --server-opt fedadam \
+        --server-opt fedyogi
 """
 import argparse
 from pathlib import Path
@@ -42,12 +49,19 @@ def build_task(n_clients: int, seed: int = 0):
     return task, parts, test_parts
 
 
+# adaptive server optimizers take a smaller step than the identity
+SERVER_OPT_LR = {"sgd": 1.0, "fedavgm": 0.9, "fedadagrad": 0.1,
+                 "fedadam": 0.1, "fedyogi": 0.1}
+
+
 def run_one(strategy: str, task, parts, test_parts, args,
-            trace_path: Path):
+            trace_path: Path, server_opt: str = "sgd"):
     cfg = ExperimentConfig(
         strategy=strategy, n_rounds=args.rounds,
         clients_per_round=args.cohort, eval_every=0, seed=args.seed,
         buffer_k=args.buffer_k, trace_path=str(trace_path),
+        server_opt=server_opt,
+        server_opt_lr=SERVER_OPT_LR.get(server_opt, 0.1),
         scenario=ScenarioConfig(straggler_fraction=args.ratio,
                                 round_timeout_s=30.0, seed=args.seed))
     return run_experiment(task, parts, test_parts, cfg)
@@ -61,23 +75,34 @@ def main() -> None:
     ap.add_argument("--cohort", type=int, default=6)
     ap.add_argument("--buffer-k", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--server-opt", action="append", default=None,
+                    metavar="NAME", dest="server_opts",
+                    help="additional merge-pipeline server optimizers to "
+                         "sweep (repeatable; 'sgd' — the identity — "
+                         "always runs first)")
     ap.add_argument("--skip-determinism-check", action="store_true")
     args = ap.parse_args()
+    server_opts = ["sgd"] + [o for o in (args.server_opts or [])
+                             if o != "sgd"]
 
     task, parts, test_parts = build_task(args.clients, seed=args.seed)
     print(f"straggler ratio {int(args.ratio * 100)}%, "
           f"{args.rounds} rounds x cohort {args.cohort}\n")
-    print(f"{'strategy':12s} {'mode':10s} {'acc':>6s} {'EUR':>5s} "
-          f"{'aggs':>5s} {'time(s)':>8s} {'cost($)':>8s}")
+    print(f"{'strategy':12s} {'srv-opt':10s} {'mode':10s} {'acc':>6s} "
+          f"{'EUR':>5s} {'aggs':>5s} {'time(s)':>8s} {'cost($)':>8s}")
 
     results = {}
     for strategy in STRATEGIES:
-        trace = OUT / f"{strategy}.jsonl"
-        res = run_one(strategy, task, parts, test_parts, args, trace)
-        results[strategy] = res
-        print(f"{strategy:12s} {res.mode:10s} {res.final_accuracy:6.3f} "
-              f"{res.mean_eur:5.2f} {len(res.rounds):5d} "
-              f"{res.total_duration_s:8.0f} {res.total_cost:8.4f}")
+        for server_opt in server_opts:
+            suffix = "" if server_opt == "sgd" else f"_{server_opt}"
+            trace = OUT / f"{strategy}{suffix}.jsonl"
+            res = run_one(strategy, task, parts, test_parts, args, trace,
+                          server_opt=server_opt)
+            results.setdefault(strategy, res)     # sgd row anchors checks
+            print(f"{strategy:12s} {server_opt:10s} {res.mode:10s} "
+                  f"{res.final_accuracy:6.3f} "
+                  f"{res.mean_eur:5.2f} {len(res.rounds):5d} "
+                  f"{res.total_duration_s:8.0f} {res.total_cost:8.4f}")
 
     semi = results["fedlesscan"].mean_eur
     for name in ("fedasync", "fedbuff"):

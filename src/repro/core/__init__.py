@@ -9,6 +9,7 @@ from .clustering import (ClusteringResult, calinski_harabasz,
 from .features import (ema, ema_step, feature_matrix, missed_round_ema,
                        normalize01, total_ema, training_ema)
 from .history import ClientHistoryDB, ClientRecord
+from .merge import SERVER_OPTS, MergePipeline, ServerOptConfig
 from .selection import SelectionPlan, select_clients, select_random
 from .strategies import (STRATEGIES, FedAsync, FedAvg, FedBuff, FedLesScan,
                          FedProx, Strategy, StrategyConfig, make_strategy)
@@ -22,4 +23,5 @@ __all__ = [
     "ClientRecord", "SelectionPlan", "select_clients", "select_random",
     "STRATEGIES", "FedAsync", "FedAvg", "FedBuff", "FedLesScan", "FedProx",
     "Strategy", "StrategyConfig", "make_strategy",
+    "SERVER_OPTS", "MergePipeline", "ServerOptConfig",
 ]

@@ -14,8 +14,16 @@ arrives (at its true virtual time).  Barrier strategies return None and
 aggregate at round close; barrier-free strategies (`barrier_free = True`)
 may return a *new global model* from the hook itself — FedAsync merges
 every arrival immediately with a staleness-damped mixing weight, FedBuff
-flushes a size-K buffer.  Both reuse `core.aggregation.aggregate`, i.e.
-the flattened Pallas `fed_agg` fast path.
+flushes a size-K buffer.
+
+Every merge — barrier round closes included — runs through the shared
+delta-based `MergePipeline` (core/merge.py): the strategy supplies the
+weighted-sum coefficients and a mixing rate, the pipeline forms the
+pseudo-gradient against the current global model and applies it through
+the configured server optimizer (`StrategyConfig.server_opt`: plain
+server-SGD by default — byte-identical to the historical replace-with-
+average — or FedAvgM / FedAdagrad / FedAdam / FedYogi with fp32 server
+moments and the fused Pallas `fed_agg_apply` kernel).
 """
 from __future__ import annotations
 
@@ -24,10 +32,11 @@ from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .aggregation import (ClientUpdate, UpdateStore, aggregate,
-                          fedavg_aggregate, staleness_aggregate,
-                          update_from_record, update_to_record)
+from .aggregation import (ClientUpdate, UpdateStore, fedavg_coefficients,
+                          staleness_coefficients, update_from_record,
+                          update_to_record)
 from .history import ClientHistoryDB
+from .merge import MergePipeline, ServerOptConfig
 from .selection import SelectionPlan
 
 Pytree = Any
@@ -47,6 +56,21 @@ class StrategyConfig:
                                   # + η·buffer average (η=1 → pure average)
     staleness_exponent: float = 0.5   # polynomial staleness damping a:
                                   # weight ∝ (staleness+1)^(-a)
+    # server optimizer on the merge pipeline (core/merge.py): the default
+    # identity (sgd, lr=1, no momentum) replaces the model with the
+    # weighted average byte-identically to the pre-pipeline behaviour
+    server_opt: str = "sgd"       # sgd|fedavgm|fedadagrad|fedadam|fedyogi
+    server_opt_lr: float = 1.0
+    server_opt_momentum: float = 0.0  # heavy-ball β (fedavgm defaults 0.9)
+    server_opt_b1: float = 0.9
+    server_opt_b2: float = 0.99
+    server_opt_eps: float = 1e-3
+
+    def server_opt_config(self) -> ServerOptConfig:
+        return ServerOptConfig(
+            name=self.server_opt, lr=self.server_opt_lr,
+            momentum=self.server_opt_momentum, b1=self.server_opt_b1,
+            b2=self.server_opt_b2, eps=self.server_opt_eps)
 
 
 class Strategy:
@@ -70,6 +94,9 @@ class Strategy:
         # pre-scheduler call sites keep their exact behaviour (the
         # scheduler shares `self.rng`, preserving the sampling stream)
         self.scheduler = self._default_scheduler()
+        # ... and a MergePipeline (core/merge.py): the single server-side
+        # merge path for every aggregation this strategy performs
+        self.merger = MergePipeline(config.server_opt_config())
 
     # ---- selection ------------------------------------------------------
     def _default_scheduler(self):
@@ -119,18 +146,23 @@ class Strategy:
         return None
 
     def _staleness_merge(self, updates: Sequence[ClientUpdate],
-                         round_number: int,
-                         now: Optional[float]) -> Optional[Pytree]:
+                         round_number: int, now: Optional[float],
+                         global_params: Optional[Pytree] = None
+                         ) -> Optional[Pytree]:
         """Shared semi-async aggregation body: merge the round's in-time
         updates with cached late updates that have arrived by `now`
-        (pop_for_round already enforces the τ cutoff), apply Eq. 3."""
+        (pop_for_round already enforces the τ cutoff), apply Eq. 3
+        through the merge pipeline."""
         pending = self.update_store.pop_for_round(round_number, now)
         merged = list(updates) + pending
         self.last_aggregate_count = len(merged)
-        if not merged:
-            return None
-        return staleness_aggregate(merged, round_number,
-                                   tau=self.config.tau)
+        fresh = [u for u in merged
+                 if (round_number - u.round_number) < self.config.tau]
+        if not fresh:
+            # zero-update merge: the pipeline keeps the model unchanged
+            return self.merger.merge(global_params, [], ())
+        return self.merger.merge(global_params, fresh,
+                                 staleness_coefficients(fresh, round_number))
 
     def accept_late_update(self, update: ClientUpdate,
                            arrival_time: float = 0.0) -> None:
@@ -140,12 +172,16 @@ class Strategy:
 
     # ---- aggregation ----------------------------------------------------
     def aggregate(self, updates: Sequence[ClientUpdate], round_number: int,
-                  now: Optional[float] = None) -> Optional[Pytree]:
-        """Return the new global model or None (keep previous)."""
+                  now: Optional[float] = None,
+                  global_params: Optional[Pytree] = None
+                  ) -> Optional[Pytree]:
+        """Return the new global model, or the unchanged `global_params`
+        (None when the caller didn't pass them) on an empty merge."""
         self.last_aggregate_count = len(updates)
         if not updates:
-            return None
-        return fedavg_aggregate(list(updates))
+            return self.merger.merge(global_params, [], ())
+        return self.merger.merge(global_params, list(updates),
+                                 fedavg_coefficients(updates))
 
     # ---- client-side hooks ----------------------------------------------
     def proximal_mu(self) -> float:
@@ -164,7 +200,8 @@ class Strategy:
         arrays = {} if arrays is None else arrays
         return {"rng": self.rng.bit_generator.state,
                 "last_aggregate_count": self.last_aggregate_count,
-                "pending": self.update_store.state_dict(arrays)}
+                "pending": self.update_store.state_dict(arrays),
+                "merger": self.merger.state_dict(arrays)}
 
     def load_state_dict(self, state: dict,
                         arrays: Optional[dict] = None) -> None:
@@ -173,6 +210,9 @@ class Strategy:
             self.rng.bit_generator.state = state["rng"]
         self.last_aggregate_count = int(state.get("last_aggregate_count", 0))
         self.update_store.load_state_dict(state.get("pending", []), arrays)
+        # absent in moment-free (pre-pipeline) checkpoints: the optimizer
+        # restores fresh and moments re-accumulate from the resume point
+        self.merger.load_state_dict(state.get("merger", {}), arrays)
 
 
 class FedAvg(Strategy):
@@ -209,10 +249,12 @@ class FedLesScan(Strategy):
             max_rounds=self.config.max_rounds,
             ema_alpha=self.config.ema_alpha, rng=self.rng)
 
-    def aggregate(self, updates, round_number, now=None):
+    def aggregate(self, updates, round_number, now=None,
+                  global_params=None):
         # include late updates from previous rounds that have ARRIVED by
         # now (in-flight ones stay queued; aged-out ones are dropped)
-        return self._staleness_merge(updates, round_number, now)
+        return self._staleness_merge(updates, round_number, now,
+                                     global_params)
 
 
 class SAFA(Strategy):
@@ -235,8 +277,10 @@ class SAFA(Strategy):
         from ..fl.scheduler import FullPoolScheduler
         return FullPoolScheduler(self.config.clients_per_round, rng=self.rng)
 
-    def aggregate(self, updates, round_number, now=None):
-        return self._staleness_merge(updates, round_number, now)
+    def aggregate(self, updates, round_number, now=None,
+                  global_params=None):
+        return self._staleness_merge(updates, round_number, now,
+                                     global_params)
 
 
 def _staleness_weight(staleness: int, exponent: float) -> float:
@@ -266,11 +310,12 @@ class FedAsync(Strategy):
         staleness = max(0, current_round - producing_round)
         alpha = (self.config.async_alpha
                  * _staleness_weight(staleness, self.config.staleness_exponent))
-        anchor = ClientUpdate("__global__", global_params,
-                              num_samples=0, round_number=current_round)
         self.last_aggregate_count = 1
-        return aggregate([anchor, update],
-                         np.array([1.0 - alpha, alpha], dtype=np.float64))
+        # merge pipeline with mix=α_s: identity server-opt folds the
+        # global model in as the (1−α) anchor of one weighted sum
+        return self.merger.merge(global_params, [update],
+                                 np.array([1.0], dtype=np.float64),
+                                 mix=alpha)
 
 
 class FedBuff(Strategy):
@@ -298,10 +343,11 @@ class FedBuff(Strategy):
                 self.config.staleness_exponent)
              for produced, u in self._buffer], dtype=np.float64)
         total = weights.sum() or 1.0
-        coeffs = np.concatenate(([1.0 - eta], eta * weights / total))
-        anchor = ClientUpdate("__global__", global_params,
-                              num_samples=0, round_number=current_round)
-        merged = aggregate([anchor] + [u for _, u in self._buffer], coeffs)
+        # pipeline with mix=η: identity server-opt reproduces the classic
+        # (1−η)·global + η·buffer-average as one anchored weighted sum
+        merged = self.merger.merge(global_params,
+                                   [u for _, u in self._buffer],
+                                   weights / total, mix=eta)
         self.last_aggregate_count = len(self._buffer)
         self._buffer.clear()
         return merged

@@ -97,12 +97,18 @@ class TraceRecorder:
         })
 
     def aggregation(self, *, time: float, round_number, merged: int,
-                    strategy: str, mode: str) -> None:
-        """One aggregation event (a round close, or an async merge)."""
-        self.records.append({
+                    strategy: str, mode: str, **extra) -> None:
+        """One aggregation event (a round close, or an async merge).
+        `extra` carries merge-pipeline metadata when a non-identity
+        server optimizer is configured: `server_opt` (family name),
+        `server_steps` (optimizer steps taken), and `update_norm`
+        (‖Δ‖₂ of the pseudo-gradient; 0.0 for a zero-update merge)."""
+        rec = {
             "type": REC_AGGREGATION, "time": time, "round": round_number,
             "merged": merged, "strategy": strategy, "mode": mode,
-        })
+        }
+        rec.update(extra)
+        self.records.append(rec)
 
     def scheduling(self, *, time: float, round_number, scheduler: str,
                    mode: str, want: int, selected, pool_size: int,

@@ -60,9 +60,12 @@ def _flat_entries(prefix: str, tree: Pytree) -> Dict[str, np.ndarray]:
     return {f"{prefix}{_SEP}{k}": v for k, v in flat.items()}
 
 
-def _unflatten_like(data, prefix: str, like: Pytree) -> Pytree:
+def _unflatten_like(data, prefix: str, like: Pytree,
+                    force_dtype=None) -> Pytree:
     """Rebuild a pytree with `like`'s structure from `prefix|<path>` npz
-    entries (shape-checked, dtype restored from `like`)."""
+    entries (shape-checked; dtype restored from `like`, or `force_dtype`
+    for state that must not inherit the params dtype — e.g. fp32
+    server-optimizer moments under a low-precision model)."""
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for kp, leaf in flat_like:
@@ -71,7 +74,7 @@ def _unflatten_like(data, prefix: str, like: Pytree) -> Pytree:
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"shape mismatch at {key}: "
                              f"{arr.shape} vs {np.shape(leaf)}")
-        leaves.append(arr.astype(np.asarray(leaf).dtype))
+        leaves.append(arr.astype(force_dtype or np.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
@@ -91,14 +94,49 @@ def _atomic_write_npz(path: Path, entries: Dict[str, np.ndarray]) -> None:
 
 
 class RoundCheckpointer:
-    """Writes/restores tagged full-fidelity checkpoints with retention."""
+    """Writes/restores tagged full-fidelity checkpoints with retention.
 
-    def __init__(self, directory: str, keep: int = 3):
+    Retention combines two policies (long async studies would otherwise
+    accumulate unbounded npz/json pairs):
+
+    * ``keep_last_n`` — the trailing N tags always survive (the resume
+      frontier); ``keep`` is the historical alias for the same knob.
+    * ``keep_best`` — additionally keep the top-K tags by a history
+      metric: ``best_metric`` names a `RoundStats` field (``accuracy``
+      by default, ``eur``/``cost``/… work too) and the score of a save
+      is that field's most recent non-None value in the driver's
+      trailing stats window; pass a callable ``(driver, params, tag) →
+      float`` for custom scoring.  Tags without a score are never
+      retained as "best".
+
+    GC deletes a pruned tag's npz *before* its json: `rounds()` only
+    lists tags with both files present, so a crash between the two
+    unlinks leaves a torn pair that is already invisible to `restore`
+    (and cleaned up by the next GC) rather than a loadable half-pair.
+    """
+
+    def __init__(self, directory: str, keep: int = 3,
+                 keep_last_n: Optional[int] = None, keep_best: int = 0,
+                 best_metric="accuracy"):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
-        self.keep = keep
+        self.keep = keep if keep_last_n is None else keep_last_n
+        self.keep_best = keep_best
+        self.best_metric = best_metric
+        self._scores: Dict[int, Optional[float]] = {}
 
     # ---- write --------------------------------------------------------
+    def _score(self, driver, params: Pytree, tag: int) -> Optional[float]:
+        if not self.keep_best:
+            return None
+        if callable(self.best_metric):
+            return self.best_metric(driver, params, tag)
+        for stats in reversed(getattr(driver, "_recent_stats", [])):
+            value = getattr(stats, self.best_metric, None)
+            if value is not None:
+                return float(value)
+        return None
+
     def save(self, driver, params: Pytree, next_round: int) -> Path:
         """Snapshot `driver` + `params` under tag `next_round` (barrier
         modes: the first round a resumed run will execute; async mode:
@@ -107,6 +145,10 @@ class RoundCheckpointer:
         state = driver.checkpoint_state(arrays)
         state["schema"] = SCHEMA_VERSION
         state["next_round"] = int(next_round)
+        score = self._score(driver, params, next_round)
+        if score is not None:
+            state["score"] = score
+        self._scores[int(next_round)] = score
         # the pair descriptor ties the two files of one save together:
         # clock + charge count make it unique across re-saves of a tag
         pair = {"schema": SCHEMA_VERSION, "tag": int(next_round),
@@ -189,10 +231,13 @@ class RoundCheckpointer:
                 f"it or resume from an older tag")
         params = _unflatten_like(data, "params", like_params)
         # every extra tree shares the model-params structure (round
-        # params, cached client updates, pending/buffered updates)
-        arrays = {key: _unflatten_like(data, f"extra{_SEP}{key}",
-                                       like_params)
-                  for key in state.get("array_keys", [])}
+        # params, cached client updates, pending/buffered updates);
+        # server-optimizer moments stay fp32 regardless of params dtype
+        arrays = {key: _unflatten_like(
+            data, f"extra{_SEP}{key}", like_params,
+            force_dtype=(np.float32 if key.startswith("server_opt/")
+                         else None))
+            for key in state.get("array_keys", [])}
         return params, arrays
 
     # ---- internals ----------------------------------------------------
@@ -202,7 +247,44 @@ class RoundCheckpointer:
     def _state_path(self, rnd: int) -> Path:
         return self.dir / f"round_{rnd:06d}.json"
 
+    def _score_of(self, rnd: int) -> Optional[float]:
+        """Score of an on-disk tag (reads the json once; pre-existing
+        tags written by an earlier process are scored from their file)."""
+        if rnd not in self._scores:
+            try:
+                state = json.loads(self._state_path(rnd).read_text())
+                self._scores[rnd] = state.get("score")
+            except (OSError, ValueError):
+                self._scores[rnd] = None
+        return self._scores[rnd]
+
     def _gc(self) -> None:
-        for rnd in self.rounds()[:-self.keep]:
+        tags = self.rounds()
+        if self.keep:
+            survivors = set(tags[-self.keep:])
+        elif self.keep_best:
+            # keep_last_n=0 with best-K retention: best-only GC — an
+            # empty trailing window, not the legacy keep-everything
+            survivors = set()
+        else:
+            # bare keep=0 retains everything (historical `[:-0]` no-op)
+            survivors = set(tags)
+        if self.keep_best:
+            scored = [(self._score_of(t), t) for t in tags]
+            ranked = sorted((s, t) for s, t in scored if s is not None)
+            survivors.update(t for _, t in ranked[-self.keep_best:])
+        for rnd in tags:
+            if rnd in survivors:
+                continue
+            # npz first: the tag disappears from rounds() immediately, so
+            # a crash between the two unlinks can't leave a loadable
+            # half-pair (torn-pair-safe deletion)
             self._params_path(rnd).unlink(missing_ok=True)
             self._state_path(rnd).unlink(missing_ok=True)
+            self._scores.pop(rnd, None)
+        # sweep orphan jsons a crashed GC left behind (npz-before-json
+        # order means a lone json is always GC litter, never a mid-save)
+        for f in self.dir.glob("round_*.json"):
+            m = re.match(r"round_(\d+)\.json$", f.name)
+            if m and not self._params_path(int(m.group(1))).exists():
+                f.unlink(missing_ok=True)

@@ -198,6 +198,14 @@ class TrainingDriver:
         else:
             self.scheduler = strategy.scheduler
         self._recent_stats: List[RoundStats] = []   # cohort_size telemetry
+        # legacy Strategy subclasses may override aggregate() without the
+        # global_params kwarg (pre-merge-pipeline signature): detect once
+        # and call them the old way — they keep their exact behaviour
+        import inspect
+        agg_params = inspect.signature(strategy.aggregate).parameters
+        self._agg_takes_global = (
+            "global_params" in agg_params
+            or any(p.kind is p.VAR_KEYWORD for p in agg_params.values()))
         # one event queue on the platform's clock, shared across rounds —
         # straggler events survive round boundaries
         self.queue = EventQueue(self.platform.clock, recorder=trace)
@@ -238,11 +246,21 @@ class TrainingDriver:
 
     def _record_aggregation(self, time: float, round_number: int,
                             merged: int) -> None:
-        if self.trace is not None:
-            self.trace.aggregation(time=time, round_number=round_number,
-                                   merged=merged,
-                                   strategy=self.strategy.name,
-                                   mode=self.mode)
+        if self.trace is None:
+            return
+        extra = {}
+        merger = getattr(self.strategy, "merger", None)
+        if merger is not None and not merger.is_identity:
+            # server-opt metadata + ‖Δ‖₂ diagnostics ride the aggregation
+            # record; the identity default adds nothing, keeping legacy
+            # traces byte-identical (a zero-update merge reads norm 0.0)
+            extra = {"server_opt": merger.config.name,
+                     "server_steps": merger.steps,
+                     "update_norm": merger.last_update_norm}
+        self.trace.aggregation(time=time, round_number=round_number,
+                               merged=merged,
+                               strategy=self.strategy.name,
+                               mode=self.mode, **extra)
 
     def _record_scheduling(self, time: float, round_number: int, want: int,
                            selected: List[str], pool_size: int) -> None:
@@ -427,8 +445,13 @@ class TrainingDriver:
         # --- aggregation runs at round close (virtual now) --------------
         self.strategy.on_round_close(round_number, now=close_time)
         updates = [c.update for c in successes if c.update is not None]
-        new_params = self.strategy.aggregate(updates, round_number,
-                                             now=close_time)
+        if self._agg_takes_global:
+            new_params = self.strategy.aggregate(
+                updates, round_number, now=close_time,
+                global_params=global_params)
+        else:                       # legacy pre-pipeline override
+            new_params = self.strategy.aggregate(updates, round_number,
+                                                 now=close_time)
         if new_params is None:
             new_params = global_params
         self._record_aggregation(close_time, round_number,

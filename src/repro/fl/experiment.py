@@ -77,11 +77,26 @@ class ExperimentConfig:
     checkpoint_dir: Optional[str] = None
     checkpoint_every: float = 0
     resume_from: Optional[str] = None
+    # retention: keep the trailing N tags plus the top-K by a RoundStats
+    # metric (fl/checkpointing.RoundCheckpointer) so long async studies
+    # don't accumulate unbounded npz/json pairs
+    checkpoint_keep_last_n: int = 3
+    checkpoint_keep_best: int = 0
+    checkpoint_best_metric: str = "accuracy"
     # barrier-free strategy knobs (core/strategies.StrategyConfig)
     buffer_k: int = 4
     async_alpha: float = 0.6
     server_lr: float = 0.7
     staleness_exponent: float = 0.5
+    # server optimizer on the merge pipeline (core/merge.py): "sgd"
+    # (identity — byte-identical legacy behaviour), "fedavgm",
+    # "fedadagrad", "fedadam", or "fedyogi", with its hyperparameters
+    server_opt: str = "sgd"
+    server_opt_lr: float = 1.0
+    server_opt_momentum: float = 0.0
+    server_opt_b1: float = 0.9
+    server_opt_b2: float = 0.99
+    server_opt_eps: float = 1e-3
 
 
 def make_straggler_profiles(client_ids, scenario: ScenarioConfig
@@ -120,7 +135,13 @@ def run_experiment(task: ClassificationTask,
         max_rounds=config.n_rounds, tau=config.tau,
         fedprox_mu=config.fedprox_mu, buffer_k=config.buffer_k,
         async_alpha=config.async_alpha, server_lr=config.server_lr,
-        staleness_exponent=config.staleness_exponent)
+        staleness_exponent=config.staleness_exponent,
+        server_opt=config.server_opt,
+        server_opt_lr=config.server_opt_lr,
+        server_opt_momentum=config.server_opt_momentum,
+        server_opt_b1=config.server_opt_b1,
+        server_opt_b2=config.server_opt_b2,
+        server_opt_eps=config.server_opt_eps)
     strategy = make_strategy(config.strategy, strat_cfg, history,
                              seed=config.seed)
 
@@ -173,7 +194,11 @@ def run_experiment(task: ClassificationTask,
         params, start_round = RoundCheckpointer(
             config.resume_from).restore(controller, params)
     if config.checkpoint_dir:
-        checkpointer = RoundCheckpointer(config.checkpoint_dir)
+        checkpointer = RoundCheckpointer(
+            config.checkpoint_dir,
+            keep_last_n=config.checkpoint_keep_last_n,
+            keep_best=config.checkpoint_keep_best,
+            best_metric=config.checkpoint_best_metric)
 
     _, result = controller.run(params, config.n_rounds, verbose=verbose,
                                start_round=start_round,

@@ -4,8 +4,12 @@
                     (causal / sliding-window / softcap / GQA)
   ssd_scan        — Mamba2 SSD chunked scan with VMEM-carried state
   fed_agg         — staleness-weighted federated aggregation (Eq. 3)
+  fed_agg_apply   — fused weighted-sum → pseudo-gradient → server-
+                    optimizer moment update → apply (core/merge.py)
 """
-from .ops import fed_agg, flash_attention, ssd_scan
+from .fed_agg import APPLY_OPTS
+from .ops import fed_agg, fed_agg_apply, flash_attention, ssd_scan
 from . import ref
 
-__all__ = ["fed_agg", "flash_attention", "ssd_scan", "ref"]
+__all__ = ["APPLY_OPTS", "fed_agg", "fed_agg_apply", "flash_attention",
+           "ssd_scan", "ref"]

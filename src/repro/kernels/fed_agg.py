@@ -1,10 +1,21 @@
-"""Pallas TPU kernel: staleness-weighted federated aggregation.
+"""Pallas TPU kernels: staleness-weighted federated aggregation.
 
 The FL server's hotspot (paper §V-D, Eq. 3): the weighted sum of K client
 updates, w = Σ_k c_k · W_k, where c_k = (t_k/t)·(n_k/n).  On GPU this is a
 grid-stride loop; on TPU we tile the stacked update matrix (K, P) into
 VMEM blocks along P, broadcast the (K,) coefficient vector, and fuse the
 multiply+reduce on the VPU in fp32 regardless of update dtype.
+
+`fed_agg_apply` extends the same (K, P) layout into the full server-side
+merge step of the delta pipeline (core/merge.py): one kernel dispatch
+computes the weighted sum, forms the pseudo-gradient
+Δ = mix·(Σ_k c_k·W_k − w), folds Δ into the server optimizer's moment
+buffers (FedAvgM / FedAdagrad / FedAdam / FedYogi — Reddi et al.,
+arXiv:2003.00295), and applies the optimizer step to the global model —
+plus a per-tile Σ Δ² side output so ‖Δ‖₂ diagnostics cost no extra pass.
+The optimizer family is a *static* argument (the branch is resolved at
+trace time); the hyperparameters (lr, mix, β₁, β₂, ε) travel as a tiny
+runtime vector so staleness-dependent mixing rates never retrace.
 """
 from __future__ import annotations
 
@@ -13,6 +24,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+# optimizer families the fused apply kernel can lower; "sgd"/"fedavgm"
+# share the heavy-ball branch (momentum 0 reduces to plain server-SGD)
+APPLY_OPTS = ("sgd", "fedavgm", "fedadagrad", "fedadam", "fedyogi")
 
 
 def _fed_agg_kernel(coeff_ref, upd_ref, out_ref):
@@ -52,3 +67,103 @@ def fed_agg(updates: jnp.ndarray, coeffs: jnp.ndarray,
         interpret=interpret,
     )(coeffs2, updates)
     return out[0, :P]
+
+
+def _make_apply_kernel(opt: str):
+    """Build the fused merge kernel body for one optimizer family.
+
+    Per P-tile, entirely on the VPU in fp32:
+
+        s     = Σ_k coeff[k] · upd[k, tile]          (weighted sum)
+        Δ     = mix · (s − g)                        (pseudo-gradient)
+        m, v  = moment update (family-specific)
+        out   = g + lr · step(m, v)
+
+    Zero-padded tail lanes are harmless: upd/g/m/v pads are 0, so Δ, the
+    moments, and the Σ Δ² side output all stay 0 there.
+    """
+
+    def kernel(scal_ref, coeff_ref, upd_ref, g_ref, m_ref, v_ref,
+               out_ref, m_out_ref, v_out_ref, sq_ref):
+        lr = scal_ref[0, 0]
+        mix = scal_ref[0, 1]
+        b1 = scal_ref[0, 2]
+        b2 = scal_ref[0, 3]
+        eps = scal_ref[0, 4]
+        upd = upd_ref[...].astype(jnp.float32)          # (K, TP)
+        coeff = coeff_ref[...].astype(jnp.float32)      # (K, 1)
+        g = g_ref[...].astype(jnp.float32)              # (1, TP)
+        s = jnp.sum(upd * coeff, axis=0, keepdims=True)
+        delta = mix * (s - g)
+        sq_ref[0, 0] = jnp.sum(delta * delta)
+        if opt in ("sgd", "fedavgm"):
+            # heavy-ball: m ← β·m + Δ (β = server momentum; 0 → plain Δ)
+            m = b1 * m_ref[...] + delta
+            v = v_ref[...]
+            step = m
+        else:
+            m = b1 * m_ref[...] + (1.0 - b1) * delta
+            dsq = delta * delta
+            if opt == "fedadagrad":
+                v = v_ref[...] + dsq
+            elif opt == "fedadam":
+                v = b2 * v_ref[...] + (1.0 - b2) * dsq
+            else:                                        # fedyogi
+                v0 = v_ref[...]
+                v = v0 - (1.0 - b2) * dsq * jnp.sign(v0 - dsq)
+            step = m / (jnp.sqrt(v) + eps)
+        out_ref[...] = g + lr * step
+        m_out_ref[...] = m
+        v_out_ref[...] = v
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("opt", "tile_p", "interpret"))
+def fed_agg_apply(updates: jnp.ndarray, coeffs: jnp.ndarray,
+                  params: jnp.ndarray, m: jnp.ndarray, v: jnp.ndarray,
+                  lr, mix, b1, b2, eps, *, opt: str = "fedadam",
+                  tile_p: int = 2048, interpret: bool = True):
+    """Fused server-update step on the flattened model.
+
+    updates: (K, P); coeffs: (K,); params/m/v: (P,) fp32 moment buffers.
+    Returns ``(new_params, new_m, new_v, update_norm)`` where
+    ``update_norm = ‖Δ‖₂`` of the pseudo-gradient Δ = mix·(Σ c·W − w).
+    """
+    if opt not in APPLY_OPTS:
+        raise ValueError(f"unknown server opt {opt!r}; "
+                         f"available: {APPLY_OPTS}")
+    K, P = updates.shape
+    tile_p = min(tile_p, P)
+    n_tiles = -(-P // tile_p)
+    pad = n_tiles * tile_p - P
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    row = lambda x: jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(1, -1)
+    g2, m2, v2 = row(params), row(m), row(v)
+    coeffs2 = coeffs.reshape(K, 1).astype(jnp.float32)
+    scal = jnp.stack([jnp.float32(lr), jnp.float32(mix), jnp.float32(b1),
+                      jnp.float32(b2), jnp.float32(eps),
+                      jnp.float32(0.0), jnp.float32(0.0),
+                      jnp.float32(0.0)]).reshape(1, 8)
+
+    vec = jax.ShapeDtypeStruct((1, n_tiles * tile_p), jnp.float32)
+    vec_spec = pl.BlockSpec((1, tile_p), lambda i: (0, i))
+    out, m_new, v_new, sq = pl.pallas_call(
+        _make_apply_kernel(opt),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, tile_p), lambda i: (0, i)),
+            vec_spec, vec_spec, vec_spec,
+        ],
+        out_specs=[vec_spec, vec_spec, vec_spec,
+                   pl.BlockSpec((1, 1), lambda i: (0, i))],
+        out_shape=[vec, vec, vec,
+                   jax.ShapeDtypeStruct((1, n_tiles), jnp.float32)],
+        interpret=interpret,
+    )(scal, coeffs2, updates, g2, m2, v2)
+    norm = jnp.sqrt(jnp.sum(sq))
+    return out[0, :P], m_new[0, :P], v_new[0, :P], norm

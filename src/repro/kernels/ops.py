@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .fed_agg import fed_agg as _fed_agg
+from .fed_agg import fed_agg_apply as _fed_agg_apply
 from .flash_attention import flash_attention as _flash_attention
 from .ssd_scan import ssd_scan as _ssd_scan
 
@@ -27,6 +28,16 @@ def fed_agg(updates: jnp.ndarray, coeffs: jnp.ndarray,
             interpret: Optional[bool] = None) -> jnp.ndarray:
     return _fed_agg(updates, coeffs, tile_p=tile_p,
                     interpret=INTERPRET if interpret is None else interpret)
+
+
+def fed_agg_apply(updates: jnp.ndarray, coeffs: jnp.ndarray,
+                  params: jnp.ndarray, m: jnp.ndarray, v: jnp.ndarray,
+                  lr, mix, b1, b2, eps, *, opt: str = "fedadam",
+                  tile_p: int = 2048, interpret: Optional[bool] = None):
+    return _fed_agg_apply(
+        updates, coeffs, params, m, v, lr, mix, b1, b2, eps, opt=opt,
+        tile_p=tile_p,
+        interpret=INTERPRET if interpret is None else interpret)
 
 
 def flash_attention(q, k, v, causal: bool = True,

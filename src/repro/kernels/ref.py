@@ -20,6 +20,39 @@ def fed_agg_ref(updates: jnp.ndarray, coeffs: jnp.ndarray) -> jnp.ndarray:
     return acc.astype(updates.dtype)
 
 
+def fed_agg_apply_ref(updates: jnp.ndarray, coeffs: jnp.ndarray,
+                      params: jnp.ndarray, m: jnp.ndarray, v: jnp.ndarray,
+                      lr, mix, b1, b2, eps, opt: str = "fedadam"):
+    """Oracle for the fused server-update kernel (fed_agg_apply).
+
+    Weighted sum → pseudo-gradient Δ = mix·(Σ c·W − w) → moment update →
+    optimizer step, all in fp32.  Returns (out, m, v, ‖Δ‖₂).
+    """
+    s = jnp.einsum("kp,k->p", updates.astype(jnp.float32),
+                   coeffs.astype(jnp.float32))
+    g = params.astype(jnp.float32)
+    delta = jnp.float32(mix) * (s - g)
+    lr, b1, b2, eps = (jnp.float32(x) for x in (lr, b1, b2, eps))
+    m = m.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    if opt in ("sgd", "fedavgm"):
+        m = b1 * m + delta
+        step = m
+    else:
+        m = b1 * m + (1.0 - b1) * delta
+        dsq = delta * delta
+        if opt == "fedadagrad":
+            v = v + dsq
+        elif opt == "fedadam":
+            v = b2 * v + (1.0 - b2) * dsq
+        elif opt == "fedyogi":
+            v = v - (1.0 - b2) * dsq * jnp.sign(v - dsq)
+        else:
+            raise ValueError(f"unknown server opt {opt!r}")
+        step = m / (jnp.sqrt(v) + eps)
+    return g + lr * step, m, v, jnp.sqrt(jnp.sum(delta * delta))
+
+
 # ------------------------------------------------------------ attention
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True,

@@ -28,9 +28,15 @@ def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
         lambda p, u: (p + u.astype(p.dtype)), params, updates)
 
 
-def _zeros_like_f32(params: Pytree) -> Pytree:
+def zeros_like_f32(params: Pytree) -> Pytree:
+    """fp32 moment buffers shaped like `params` (mixed-precision training
+    and the server-side merge pipeline keep fp32 optimizer state even
+    when the params themselves are lower precision)."""
     return jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params)
+
+
+_zeros_like_f32 = zeros_like_f32
 
 
 # --------------------------------------------------------------------------

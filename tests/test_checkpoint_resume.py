@@ -226,6 +226,98 @@ def test_checkpointer_retention_and_latest(tmp_path):
     assert ckpt.latest_round() == 4
 
 
+def test_retention_keep_best_by_history_metric(tmp_path):
+    """keep_best retains the top-K tags by a RoundStats metric on top of
+    the keep_last_n trailing window (long-async-study GC)."""
+    d = _driver()
+    ckpt = RoundCheckpointer(tmp_path / "ckpt", keep_last_n=1, keep_best=1,
+                             best_metric="accuracy")
+    params = {"w": jnp.zeros(4)}
+    for rnd, acc in enumerate([0.2, 0.9, 0.5, 0.1]):
+        params, _ = d.run_round(params, rnd)
+        d._recent_stats[-1].accuracy = acc     # the history metric
+        ckpt.save(d, params, rnd + 1)
+    # tag 2 scored 0.9 (best), tag 4 is the trailing window
+    assert ckpt.rounds() == [2, 4]
+    state = json.loads((tmp_path / "ckpt" / "round_000002.json").read_text())
+    assert state["score"] == pytest.approx(0.9)
+    # no torn leftovers: every surviving tag has both files
+    names = sorted(p.name for p in (tmp_path / "ckpt").iterdir())
+    assert names == ["round_000002.json", "round_000002.npz",
+                     "round_000004.json", "round_000004.npz"]
+    # the best tag is still restorable
+    other = _driver()
+    _, next_round = ckpt.restore(other, {"w": jnp.zeros(4)}, round_number=2)
+    assert next_round == 2
+
+
+def test_retention_keep_best_scores_preexisting_tags_from_disk(tmp_path):
+    """A fresh checkpointer GC-ing a directory written by an earlier
+    process reads the persisted scores instead of discarding history."""
+    d = _driver()
+    writer = RoundCheckpointer(tmp_path / "ckpt", keep=10, keep_best=1,
+                               best_metric="accuracy")
+    params = {"w": jnp.zeros(4)}
+    for rnd, acc in enumerate([0.3, 0.8, 0.4]):
+        params, _ = d.run_round(params, rnd)
+        d._recent_stats[-1].accuracy = acc
+        writer.save(d, params, rnd + 1)
+    # new process, tighter policy: trailing 1 + best 1 (tag 2, acc 0.8)
+    later = RoundCheckpointer(tmp_path / "ckpt", keep_last_n=1, keep_best=1,
+                              best_metric="accuracy")
+    params, _ = d.run_round(params, 3)
+    d._recent_stats[-1].accuracy = 0.1
+    later.save(d, params, 4)
+    assert later.rounds() == [2, 4]
+
+
+def test_retention_best_only(tmp_path):
+    """keep_last_n=0 with keep_best>0 means best-only retention (an
+    empty trailing window), not the legacy keep-everything quirk."""
+    d = _driver()
+    ckpt = RoundCheckpointer(tmp_path / "ckpt", keep_last_n=0, keep_best=2,
+                             best_metric="accuracy")
+    params = {"w": jnp.zeros(4)}
+    for rnd, acc in enumerate([0.2, 0.9, 0.5, 0.7]):
+        params, _ = d.run_round(params, rnd)
+        d._recent_stats[-1].accuracy = acc
+        ckpt.save(d, params, rnd + 1)
+    assert ckpt.rounds() == [2, 4]           # the two best scores
+
+
+def test_gc_sweeps_orphan_json_from_crashed_gc(tmp_path):
+    """A crash between _gc's npz and json unlinks leaves a lone json;
+    the next GC removes it instead of letting litter accumulate."""
+    d = _driver()
+    ckpt = RoundCheckpointer(tmp_path / "ckpt", keep=2)
+    params = {"w": jnp.zeros(4)}
+    for rnd in range(2):
+        params, _ = d.run_round(params, rnd)
+        ckpt.save(d, params, rnd + 1)
+    # simulate the crashed-GC state: tag 1's npz gone, json left behind
+    (tmp_path / "ckpt" / "round_000001.npz").unlink()
+    params, _ = d.run_round(params, 2)
+    ckpt.save(d, params, 3)
+    names = sorted(p.name for p in (tmp_path / "ckpt").iterdir())
+    assert names == ["round_000002.json", "round_000002.npz",
+                     "round_000003.json", "round_000003.npz"]
+
+
+def test_retention_callable_metric_and_unscored_tags(tmp_path):
+    """A callable best_metric scores saves directly; tags without a score
+    are never retained as 'best' (only by the trailing window)."""
+    d = _driver()
+    scores = {1: 5.0, 2: None, 3: 7.0, 4: None}
+    ckpt = RoundCheckpointer(
+        tmp_path / "ckpt", keep_last_n=1, keep_best=1,
+        best_metric=lambda driver, params, tag: scores[tag])
+    params = {"w": jnp.zeros(4)}
+    for rnd in range(4):
+        params, _ = d.run_round(params, rnd)
+        ckpt.save(d, params, rnd + 1)
+    assert ckpt.rounds() == [3, 4]           # 3 best-scored, 4 trailing
+
+
 def test_checkpoint_writes_are_atomic(tmp_path):
     d = _driver()
     ckpt = RoundCheckpointer(tmp_path / "ckpt")
