@@ -1,0 +1,338 @@
+"""Fleet-scale hot-path benchmark: propose latency + events/sec at
+10³ → 10⁶ registered clients.
+
+Three measurements, written to ``results/BENCH_fleet_scale.json``:
+
+1. **Propose latency** per scheduling policy (random / fedlesscan /
+   apodotiko / rotation) over a synthetic behavioural population
+   (70% participants, 10% stragglers, 20% rookies — so the fedlesscan
+   path exercises tier masks, the dense EMA feature gather, and sketch
+   clustering, not just the rookie fast path).  Reported as p50/p95 ms.
+
+2. **Event-queue throughput**: schedule/pop (with a cancellation mix
+   that exercises tombstone compaction) on the slotted `Event` heap,
+   in events per second.
+
+3. **Dict-baseline comparison** at ``--baseline-size``: the same
+   scheduler-loop workload (propose a cohort, then feed every
+   completion back as mark_success + client_report) run against the array-backed
+   `ClientHistoryDB` and against a faithful reimplementation of the
+   pre-refactor dict-of-`ClientRecord` store, whose per-propose tier
+   partition walks every record in Python.  Reported as completions/sec
+   each plus the speedup ratio — the ≥10× acceptance gate.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_fleet_scale
+CI:   PYTHONPATH=src python -m benchmarks.bench_fleet_scale \
+          --sizes 1000 10000 --baseline-size 10000
+Full: PYTHONPATH=src python -m benchmarks.bench_fleet_scale \
+          --sizes 1000 10000 100000 1000000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.history import DEFAULT_EMA_ALPHA, ClientHistoryDB
+from repro.faas.events import EventKind, EventQueue
+from repro.fl.scheduler import (ApodotikoScheduler, FedLesScanScheduler,
+                                RandomScheduler, RotationScheduler)
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+OUT = RESULTS / "BENCH_fleet_scale.json"
+
+DEFAULT_SIZES = (1_000, 10_000, 100_000, 1_000_000)
+POLICIES = ("random", "fedlesscan", "apodotiko", "rotation")
+
+
+def make_ids(n: int) -> List[str]:
+    return [f"c{i:07d}" for i in range(n)]
+
+
+def seed_history(n: int, seed: int = 0) -> tuple:
+    """(db, ids): an array-backed store with a synthetic behavioural mix
+    — ~90% participants (training history), 10% stragglers (cooldown +
+    one miss), and at most 64 rookies, so a 256-cohort propose falls
+    through the rookie fast path into tier masking, the dense EMA
+    feature gather, and (sketch) clustering — the paths whose cost
+    actually scales with fleet size.  Seeded straight into the
+    struct-of-arrays (the per-event mutators are exercised by the
+    baseline comparison; here we need a large populated fleet quickly).
+    The ragged mirrors stay empty: features read the maintained dense
+    columns."""
+    ids = make_ids(n)
+    db = ClientHistoryDB()
+    db.ensure(ids)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_strag = int(n * 0.1)
+    n_rookie = min(64, max(n - n_strag - 1, 0))
+    n_part = n - n_strag - n_rookie
+    part = perm[:n_part]
+    strag = perm[n_part:n_part + n_strag]
+    active = np.concatenate((part, strag))
+
+    times = rng.lognormal(mean=1.0, sigma=0.5, size=active.size)
+    invoc = rng.integers(1, 6, size=active.size)
+    db._n_times[active] = invoc
+    db._t_ema[active] = times
+    db._t_max[active] = times * rng.uniform(1.0, 1.5, size=active.size)
+    db._invocations[active] = invoc
+    db._successes[active] = invoc
+    db._last_round[active] = rng.integers(0, 10, size=active.size)
+
+    db._cooldown[strag] = 2 ** rng.integers(0, 3, size=strag.size)
+    db._failures[strag] = 1
+    if db._missed_mat.shape[1] < 1:
+        pad = np.full((db._missed_mat.shape[0], 4), np.inf, np.float64)
+        db._missed_mat = pad
+    db._missed_mat[strag, 0] = rng.integers(0, 8, size=strag.size)
+    db._n_missed[strag] = 1
+    db.rebuild_tiers()                  # direct array seeding bypassed
+    return db, ids                      # the per-mutation tier syncs
+
+
+def make_scheduler(policy: str, db: ClientHistoryDB, ids: List[str],
+                   cohort: int, seed: int = 1):
+    if policy == "random":
+        return RandomScheduler(cohort, seed=seed)
+    if policy == "fedlesscan":
+        return FedLesScanScheduler(cohort, db, max_rounds=50, seed=seed)
+    if policy == "apodotiko":
+        sched = ApodotikoScheduler(cohort, seed=seed)
+        # mirror the history mix into the scheduler's own tallies
+        sched._interner.intern_many(ids)
+        sched._capacity()
+        n = len(ids)
+        sched._dur[:n] = db._t_ema[:n]
+        sched._seen[:n] = db._n_times[:n] > 0
+        sched._obs[:n] = db._invocations[:n] + db._failures[:n]
+        sched._succ[:n] = db._successes[:n]
+        sched._fin[:n] = db._successes[:n]
+        return sched
+    if policy == "rotation":
+        return RotationScheduler(cohort, ids, timeout_s=120.0, seed=seed)
+    raise ValueError(policy)
+
+
+def bench_propose(n: int, cohort: int, reps: int, seed: int = 0
+                  ) -> Dict[str, dict]:
+    db, ids = seed_history(n, seed)
+    out: Dict[str, dict] = {}
+    for policy in POLICIES:
+        sched = make_scheduler(policy, db, ids, cohort)
+        sched.propose(ids, cohort, 0.0, 0)       # warm-up (interner memo)
+        lat = []
+        for r in range(reps):
+            t0 = time.perf_counter()
+            picks = sched.propose(ids, cohort, float(r + 1), r + 1)
+            lat.append((time.perf_counter() - t0) * 1000.0)
+            assert len(picks) > 0
+        out[policy] = {
+            "p50_ms": round(float(np.percentile(lat, 50)), 3),
+            "p95_ms": round(float(np.percentile(lat, 95)), 3),
+            "max_ms": round(max(lat), 3),
+        }
+        print(f"  propose {policy:11s} n={n:>9,}  "
+              f"p50={out[policy]['p50_ms']:8.2f}ms  "
+              f"p95={out[policy]['p95_ms']:8.2f}ms")
+    return out
+
+
+def bench_event_queue(n_events: int, seed: int = 0) -> dict:
+    """Schedule/pop throughput with a 25% cancellation mix (tombstone
+    compaction included in the measured time)."""
+    rng = np.random.default_rng(seed)
+    q = EventQueue(trace_maxlen=1024)
+    times = rng.uniform(0.0, 1e6, size=n_events)
+    cancel_mask = rng.random(n_events) < 0.25
+    t0 = time.perf_counter()
+    events = [q.schedule(float(times[i]), EventKind.CLIENT_FINISH,
+                         client_id="c", round_number=0)
+              for i in range(n_events)]
+    for i in np.flatnonzero(cancel_mask):
+        events[i].cancel()
+    popped = 0
+    while q.pop() is not None:
+        popped += 1
+    elapsed = time.perf_counter() - t0
+    assert popped == n_events - int(cancel_mask.sum())
+    return {"n_events": n_events, "popped": popped,
+            "events_per_sec": round(n_events / elapsed),
+            "elapsed_s": round(elapsed, 3)}
+
+
+# ---------------------------------------------------------------------------
+# Dict-backed baseline: the pre-refactor store shape.  One dataclass-like
+# record per client in a dict; every propose partitions the whole pool by
+# walking the records in Python (exactly what `ClientHistoryDB.partition`
+# + per-record tier properties did before the array store).
+# ---------------------------------------------------------------------------
+
+class _DictRecord:
+    __slots__ = ("training_times", "missed_rounds", "cooldown",
+                 "invocations", "successes", "failures", "last_round")
+
+    def __init__(self):
+        self.training_times: List[float] = []
+        self.missed_rounds: List[int] = []
+        self.cooldown = 0
+        self.invocations = 0
+        self.successes = 0
+        self.failures = 0
+        self.last_round = -1
+
+    @property
+    def is_rookie(self):
+        return not self.training_times and not self.missed_rounds
+
+
+class _DictHistoryDB:
+    def __init__(self, ids: List[str]):
+        self.records = {cid: _DictRecord() for cid in ids}
+
+    def partition(self, ids):
+        rookies, participants, stragglers = [], [], []
+        for cid in ids:
+            rec = self.records[cid]
+            if rec.is_rookie:
+                rookies.append(cid)
+            elif rec.cooldown > 0:
+                stragglers.append(cid)
+            else:
+                participants.append(cid)
+        return rookies, participants, stragglers
+
+    def mark_success(self, cid, rnd):
+        rec = self.records[cid]
+        rec.cooldown = 0
+        rec.successes += 1
+        rec.invocations += 1
+        rec.last_round = rnd
+
+    def client_report(self, cid, rnd, t):
+        rec = self.records[cid]
+        rec.training_times.append(float(t))
+        if rnd in rec.missed_rounds:
+            rec.missed_rounds.remove(rnd)
+
+
+def _loop_dict(ids: List[str], iters: int, refill: int, seed: int) -> int:
+    db = _DictHistoryDB(ids)
+    rng = np.random.default_rng(seed)
+    done = 0
+    for r in range(iters):
+        rookies, participants, stragglers = db.partition(ids)
+        pool = rookies if len(rookies) >= refill else ids
+        pos = rng.choice(len(pool), size=min(refill, len(pool)),
+                         replace=False)
+        for p in pos:
+            cid = pool[int(p)]
+            db.mark_success(cid, r)
+            db.client_report(cid, r, 2.5)
+            done += 1
+    return done
+
+
+def _loop_array(ids: List[str], iters: int, refill: int, seed: int) -> int:
+    db = ClientHistoryDB()
+    db.ensure(ids)
+    rng = np.random.default_rng(seed)
+    done = 0
+    for r in range(iters):
+        idx = db.indices_for(ids)
+        rookie_m, _, _ = db.tier_masks(idx)
+        rookie_idx = idx[rookie_m]
+        source = rookie_idx if rookie_idx.size >= refill else idx
+        pos = rng.choice(source.size, size=min(refill, source.size),
+                         replace=False)
+        for cid in db.ids_of(source[pos]):
+            db.mark_success(cid, r)
+            db.client_report(cid, r, 2.5)
+            done += 1
+    return done
+
+
+def bench_baseline_comparison(n: int, iters: int, refill: int,
+                              seed: int = 0) -> dict:
+    """Async-style scheduler loop on both stores: every slot refill is
+    one propose (tier partition over the whole registered pool + pick)
+    followed by the refilled clients' completion feedback — exactly the
+    per-event pattern the barrier-free driver runs.  The dict baseline
+    pays an O(N)-record Python partition per event; the array store pays
+    a vectorized mask pass.  Reported in completions/sec."""
+    ids = make_ids(n)
+    t0 = time.perf_counter()
+    done_a = _loop_array(ids, iters, refill, seed)
+    t_array = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    done_d = _loop_dict(ids, iters, refill, seed)
+    t_dict = time.perf_counter() - t0
+    assert done_a == done_d
+    eps_a, eps_d = done_a / t_array, done_d / t_dict
+    out = {
+        "size": n, "iters": iters, "refill": refill,
+        "completions": done_a,
+        "array_events_per_sec": round(eps_a, 1),
+        "dict_events_per_sec": round(eps_d, 1),
+        "speedup": round(eps_a / eps_d, 2),
+    }
+    print(f"  baseline n={n:,}: array={eps_a:,.0f} ev/s  "
+          f"dict={eps_d:,.0f} ev/s  speedup={out['speedup']}x")
+    return out
+
+
+def run_bench(sizes, cohort: int, reps: int, baseline_size: int,
+              baseline_iters: int, seed: int = 0) -> dict:
+    report: dict = {"sizes": list(sizes), "cohort": cohort,
+                    "ema_alpha": DEFAULT_EMA_ALPHA,
+                    "propose": {}, "event_queue": {}}
+    for n in sizes:
+        print(f"n = {n:,}")
+        report["propose"][str(n)] = bench_propose(n, cohort, reps, seed)
+        ev = bench_event_queue(min(4 * n, 400_000), seed)
+        report["event_queue"][str(n)] = ev
+        print(f"  event queue: {ev['events_per_sec']:,} ev/s "
+              f"({ev['n_events']:,} events)")
+    report["baseline_comparison"] = bench_baseline_comparison(
+        baseline_size, baseline_iters, 8, seed)
+    biggest = str(max(sizes))
+    report["acceptance"] = {
+        "max_size": int(biggest),
+        "worst_propose_p50_ms": max(
+            p["p50_ms"] for p in report["propose"][biggest].values()),
+        "baseline_speedup": report["baseline_comparison"]["speedup"],
+    }
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=list(DEFAULT_SIZES))
+    ap.add_argument("--cohort", type=int, default=256)
+    ap.add_argument("--reps", type=int, default=7)
+    ap.add_argument("--baseline-size", type=int, default=100_000)
+    ap.add_argument("--baseline-iters", type=int, default=100,
+                    help="slot-refill proposes in the baseline comparison")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=Path, default=OUT)
+    args = ap.parse_args()
+
+    report = run_bench(args.sizes, args.cohort, args.reps,
+                       args.baseline_size, args.baseline_iters, args.seed)
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(report, indent=2) + "\n")
+    acc = report["acceptance"]
+    print(f"wrote {args.out}")
+    print(f"worst propose p50 at n={acc['max_size']:,}: "
+          f"{acc['worst_propose_p50_ms']}ms | baseline speedup: "
+          f"{acc['baseline_speedup']}x")
+
+
+if __name__ == "__main__":
+    main()

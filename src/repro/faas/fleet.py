@@ -24,16 +24,83 @@ the invoker then observes as repeated PLATFORM_FAILURE events.
 from __future__ import annotations
 
 from dataclasses import replace
-from typing import Dict, Iterable, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
+from ..core.interning import ClientInterner, grow_to
 from .platform import SimulatedFaaSPlatform, VirtualClock
+
+
+class _AssignmentView:
+    """Dict-compatible live view of a policy's array-backed sticky table.
+
+    The historical `policy.assignment` surface was a plain ``{client_id:
+    platform_name}`` dict; at fleet scale the table is an int64 array
+    over interned client indices, and this view keeps the dict reads and
+    writes working against it unchanged."""
+
+    __slots__ = ("_policy",)
+
+    def __init__(self, policy: "RoutingPolicy"):
+        self._policy = policy
+
+    def get(self, client_id: str, default=None):
+        name = self._policy._get_assignment(client_id)
+        return default if name is None else name
+
+    def __getitem__(self, client_id: str) -> str:
+        name = self._policy._get_assignment(client_id)
+        if name is None:
+            raise KeyError(client_id)
+        return name
+
+    def __setitem__(self, client_id: str, name: str) -> None:
+        self._policy._set_assignment(client_id, name)
+
+    def __contains__(self, client_id) -> bool:
+        return self._policy._get_assignment(client_id) is not None
+
+    def _pairs(self):
+        pol = self._policy
+        ids = pol._interner.ids
+        table = pol._assigned
+        for i in range(len(ids)):
+            p = table[i]
+            if p >= 0:
+                yield ids[i], pol._names[int(p)]
+
+    def __iter__(self):
+        return (cid for cid, _ in self._pairs())
+
+    def __len__(self) -> int:
+        n = len(self._policy._interner)
+        return int((self._policy._assigned[:n] >= 0).sum())
+
+    def keys(self):
+        return list(self)
+
+    def values(self):
+        return [name for _, name in self._pairs()]
+
+    def items(self):
+        return list(self._pairs())
+
+    def __eq__(self, other):
+        return dict(self._pairs()) == other
+
+    def __repr__(self):
+        return f"_AssignmentView({dict(self._pairs())!r})"
 
 
 class RoutingPolicy:
     """Maps client ids to platform names; decisions are sticky so a
-    client's warm instances stay meaningful across rounds."""
+    client's warm instances stay meaningful across rounds.
+
+    The sticky table is array-backed (interned client index → platform
+    index) so a million registered clients cost one int64 slot each, not
+    a dict entry of Python strings; `assignment` exposes the historical
+    dict surface as a live view."""
 
     def __init__(self, platform_names: Sequence[str],
                  assignment: Optional[Dict[str, str]] = None,
@@ -42,7 +109,13 @@ class RoutingPolicy:
         if not platform_names:
             raise ValueError("RoutingPolicy needs at least one platform")
         self.platform_names = list(platform_names)
-        self.assignment = dict(assignment or {})
+        # encoding table: routing candidates first, then any foreign
+        # names seeded via explicit assignments
+        self._names: List[str] = list(self.platform_names)
+        self._name_idx: Dict[str, int] = {
+            n: i for i, n in enumerate(self._names)}
+        self._interner = ClientInterner()
+        self._assigned = np.full(0, -1, dtype=np.int64)
         self.default = default or self.platform_names[0]
         if self.default not in self.platform_names:
             raise ValueError(f"default platform {self.default!r} not in "
@@ -52,9 +125,36 @@ class RoutingPolicy:
         self.mode = mode
         self._rr = 0
         self._rng = np.random.default_rng(seed)
+        self._default_idx = self._name_idx[self.default]
+        for cid, name in (assignment or {}).items():
+            self._set_assignment(cid, name)
+
+    # ---- array-backed sticky table -----------------------------------
+    @property
+    def assignment(self) -> _AssignmentView:
+        return _AssignmentView(self)
+
+    def _get_assignment(self, client_id: str) -> Optional[str]:
+        i = self._interner.lookup(client_id)
+        if i < 0 or i >= self._assigned.size:
+            return None
+        p = self._assigned[i]
+        return self._names[int(p)] if p >= 0 else None
+
+    def _set_assignment(self, client_id: str, name: str) -> None:
+        pi = self._name_idx.get(name)
+        if pi is None:                       # foreign name: extend encoding
+            pi = len(self._names)
+            self._names.append(name)
+            self._name_idx[name] = pi
+        i = self._interner.intern(client_id)
+        if i >= self._assigned.size:
+            self._assigned = grow_to(
+                self._assigned, len(self._interner), fill=-1)
+        self._assigned[i] = pi
 
     def route(self, client_id: str) -> str:
-        name = self.assignment.get(client_id)
+        name = self._get_assignment(client_id)
         if name is not None:
             return name
         if self.mode == "round-robin":
@@ -64,18 +164,45 @@ class RoutingPolicy:
             name = str(self._rng.choice(self.platform_names))
         else:
             name = self.default
-        self.assignment[client_id] = name      # sticky from now on
+        self._set_assignment(client_id, name)  # sticky from now on
         return name
+
+    def prefill(self, client_ids: Sequence[str]) -> None:
+        """Bulk-assign every unassigned client in one vectorized pass —
+        the fleet-scale fast path for registering a whole pool up front.
+        Per-client results are identical to repeated `route` calls; the
+        ``random`` mode falls back to scalar draws to preserve the RNG
+        stream."""
+        idx = self._interner.indices_for(client_ids)
+        self._assigned = grow_to(self._assigned, len(self._interner),
+                                 fill=-1)
+        need = idx[self._assigned[idx] < 0]
+        if need.size == 0:
+            return
+        if self.mode == "round-robin":
+            k = len(self.platform_names)
+            self._assigned[need] = (self._rr + np.arange(need.size)) % k
+            self._rr += int(need.size)
+        elif self.mode == "random":
+            for i in need:                   # stream parity with route()
+                self._assigned[i] = self._name_idx[
+                    str(self._rng.choice(self.platform_names))]
+        else:
+            self._assigned[need] = self._default_idx
 
     # ---- checkpoint surface (fl/checkpointing.py) --------------------
     def state_dict(self) -> dict:
         """JSON-ready snapshot of the mutable routing state (sticky
         assignments, rotation cursor, RNG stream)."""
-        return {"assignment": dict(self.assignment), "rr": self._rr,
+        return {"assignment": dict(self.assignment._pairs()),
+                "rr": self._rr,
                 "rng": self._rng.bit_generator.state}
 
     def load_state_dict(self, state: dict) -> None:
-        self.assignment = dict(state.get("assignment", {}))
+        self._interner = ClientInterner()
+        self._assigned = np.full(0, -1, dtype=np.int64)
+        for cid, name in state.get("assignment", {}).items():
+            self._set_assignment(cid, name)
         self._rr = int(state.get("rr", 0))
         if "rng" in state:
             self._rng.bit_generator.state = state["rng"]

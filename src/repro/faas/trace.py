@@ -14,6 +14,18 @@ replays the schedule the event queue produced.
 Because everything runs on the virtual clock, two same-seed runs emit
 byte-identical traces — the recorder never reads wall-clock time.
 
+Fleet scale: by default all records buffer in memory (`records`), which
+is exactly the historical behaviour.  Passing ``stream_path`` turns the
+recorder into a streaming writer: records accumulate in a bounded
+buffer and are appended to the JSONL file every ``flush_every`` records,
+so memory stays O(flush_every) at any trace length; ``shard_records``
+additionally rotates the stream across numbered shard files
+(``<stem>.00000.jsonl``, ``<stem>.00001.jsonl``, …) for multi-gigabyte
+runs.  The streamed bytes are the exact `dumps()` bytes — same-seed
+runs produce byte-identical output in either mode — and the read-back
+surface (`select`, `billed_total`, `dumps`, `record_count`) spans
+flushed shards plus the live buffer transparently.
+
 The recorder also keeps a *rolling window* of per-platform attempt
 outcomes (failures, cold starts), fed exclusively by the platform-side
 `on_plan` hook — one observation per sampled attempt, including crash
@@ -29,7 +41,7 @@ from __future__ import annotations
 import json
 from collections import deque
 from pathlib import Path
-from typing import Dict, FrozenSet, List, Optional
+from typing import Dict, FrozenSet, Iterator, List, Optional
 
 # record types emitted into the JSONL stream
 REC_ATTEMPT = "attempt"
@@ -39,19 +51,47 @@ REC_ROUTE = "route"
 REC_EVENT = "event"
 REC_SCHEDULING = "scheduling"
 
+_UNSHARDED_ROOM = 1 << 62
+
+
+def _dump_line(rec: dict) -> str:
+    """One canonical JSONL line (deterministic: sorted keys,
+    repr-round-trip floats) — the single formatter both the in-memory
+    and the streaming paths go through."""
+    return json.dumps(rec, sort_keys=True) + "\n"
+
 
 class TraceRecorder:
     """Collects simulation records and rolling per-platform telemetry."""
 
     def __init__(self, telemetry_window: int = 50,
-                 event_kinds: Optional[FrozenSet[str]] = None):
-        self.records: List[dict] = []
+                 event_kinds: Optional[FrozenSet[str]] = None,
+                 stream_path=None, flush_every: int = 4096,
+                 shard_records: Optional[int] = None):
+        self.records: List[dict] = []       # in-memory buffer
         self.telemetry_window = telemetry_window
         # queue-event logging is opt-in (the attempt stream already covers
         # the invocation lifecycle); pass e.g. {"round_deadline"}
         self.event_kinds = event_kinds or frozenset()
         self._windows: Dict[str, deque] = {}
         self._round_aliases: Dict[int, int] = {}
+        # streaming mode (None = buffer everything, the historical default)
+        self.stream_path = Path(stream_path) if stream_path else None
+        self.flush_every = max(1, int(flush_every))
+        self.shard_records = shard_records
+        self._flushed = 0                   # records already on disk
+        self._shards: List[Path] = []
+        self._shard_counts: List[int] = []
+
+    @property
+    def record_count(self) -> int:
+        """Total records emitted so far (flushed + buffered) — the
+        checkpoint trace-offset surface at any fleet size."""
+        return self._flushed + len(self.records)
+
+    @property
+    def streaming(self) -> bool:
+        return self.stream_path is not None
 
     def alias_round(self, engine_round: int, reported_round) -> None:
         """Barrier-free mode: the engine schedules each invocation as its
@@ -61,6 +101,12 @@ class TraceRecorder:
         aggregation records.  The original ticket id is preserved in the
         record's 'ticket' field."""
         self._round_aliases[engine_round] = reported_round
+
+    def _append(self, rec: dict) -> None:
+        self.records.append(rec)
+        if (self.stream_path is not None
+                and len(self.records) >= self.flush_every):
+            self.flush()
 
     # ---- sinks (called by the simulation layers) ----------------------
     def attempt(self, *, client_id: str, platform: str, round_number,
@@ -84,14 +130,14 @@ class TraceRecorder:
         if round_number in self._round_aliases:
             rec["ticket"] = round_number
             rec["round"] = self._round_aliases[round_number]
-        self.records.append(rec)
+        self._append(rec)
 
     def billing(self, *, cost: float, duration_s: float, kind: str,
                 client_id: Optional[str] = None,
                 round_number=None) -> None:
         """One charge on the cost meter.  Summing the `cost` fields of all
         billing records reconstructs `CostMeter.total`."""
-        self.records.append({
+        self._append({
             "type": REC_BILLING, "cost": cost, "duration_s": duration_s,
             "kind": kind, "client_id": client_id, "round": round_number,
         })
@@ -108,7 +154,7 @@ class TraceRecorder:
             "merged": merged, "strategy": strategy, "mode": mode,
         }
         rec.update(extra)
-        self.records.append(rec)
+        self._append(rec)
 
     def scheduling(self, *, time: float, round_number, scheduler: str,
                    mode: str, want: int, selected, pool_size: int,
@@ -123,11 +169,11 @@ class TraceRecorder:
             "selected": list(selected), "pool_size": pool_size,
         }
         rec.update(extra)
-        self.records.append(rec)
+        self._append(rec)
 
     def route(self, client_id: str, platform: str, reason: str) -> None:
         """A routing decision (fresh assignment or telemetry re-route)."""
-        self.records.append({
+        self._append({
             "type": REC_ROUTE, "client_id": client_id,
             "platform": platform, "reason": reason,
         })
@@ -144,10 +190,69 @@ class TraceRecorder:
         """EventQueue hook: called for every popped event; records only
         the kinds in `event_kinds` (off by default)."""
         if ev.kind.value in self.event_kinds:
-            self.records.append({
+            self._append({
                 "type": REC_EVENT, "time": ev.time, "kind": ev.kind.value,
                 "client_id": ev.client_id, "round": ev.round_number,
             })
+
+    # ---- streaming writer ---------------------------------------------
+    def _shard_with_room(self) -> tuple:
+        """(path, remaining capacity) of the shard to append to next."""
+        if not self.shard_records:
+            if not self._shards:
+                self._shards = [self.stream_path]
+                self._shard_counts = [0]
+            return self._shards[0], _UNSHARDED_ROOM
+        if (not self._shards
+                or self._shard_counts[-1] >= self.shard_records):
+            i = len(self._shards)
+            p = self.stream_path.with_name(
+                f"{self.stream_path.stem}.{i:05d}.jsonl")
+            self._shards.append(p)
+            self._shard_counts.append(0)
+        return self._shards[-1], self.shard_records - self._shard_counts[-1]
+
+    def flush(self) -> None:
+        """Append the buffer to the stream file(s) and drop it — memory
+        stays bounded regardless of trace length.  No-op when not
+        streaming (the buffer IS the trace then)."""
+        if self.stream_path is None or not self.records:
+            return
+        self.stream_path.parent.mkdir(parents=True, exist_ok=True)
+        buf = self.records
+        pos = 0
+        while pos < len(buf):
+            path, room = self._shard_with_room()
+            take = buf[pos:pos + room]
+            with path.open("a", encoding="utf-8") as fh:
+                fh.writelines(_dump_line(r) for r in take)
+            self._shard_counts[-1] += len(take)
+            pos += len(take)
+        self._flushed += len(buf)
+        self.records = []
+
+    def shard_paths(self) -> List[Path]:
+        """Stream files written so far (one entry unless sharding)."""
+        return list(self._shards)
+
+    def _iter_lines(self) -> Iterator[str]:
+        """Every record as its canonical JSONL line — flushed shards
+        first, then the live buffer; never materializes the full trace."""
+        for path in self._shards:
+            with path.open("r", encoding="utf-8") as fh:
+                yield from fh
+        for rec in self.records:
+            yield _dump_line(rec)
+
+    def iter_records(self) -> Iterator[dict]:
+        """Every record as a dict, in emission order, across both the
+        flushed stream and the live buffer."""
+        for path in self._shards:
+            with path.open("r", encoding="utf-8") as fh:
+                for line in fh:
+                    if line.strip():
+                        yield json.loads(line)
+        yield from self.records
 
     # ---- checkpoint surface (fl/checkpointing.py) ---------------------
     def telemetry_state_dict(self) -> dict:
@@ -182,6 +287,9 @@ class TraceRecorder:
 
     # ---- export -------------------------------------------------------
     def select(self, record_type: str) -> List[dict]:
+        if self._flushed:
+            return [r for r in self.iter_records()
+                    if r["type"] == record_type]
         return [r for r in self.records if r["type"] == record_type]
 
     def billed_total(self) -> float:
@@ -189,15 +297,22 @@ class TraceRecorder:
         return sum(r["cost"] for r in self.select(REC_BILLING))
 
     def dumps(self) -> str:
-        """The full trace as a JSONL string (deterministic: sorted keys,
-        repr-round-trip floats)."""
-        return "".join(json.dumps(r, sort_keys=True) + "\n"
-                       for r in self.records)
+        """The full trace as a JSONL string — byte-identical whether the
+        recorder buffered or streamed."""
+        if self._flushed:
+            return "".join(self._iter_lines())
+        return "".join(_dump_line(r) for r in self.records)
 
     def to_jsonl(self, path) -> Path:
         p = Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(self.dumps())
+        if self._flushed:
+            self.flush()
+            with p.open("w", encoding="utf-8") as out:
+                for line in self._iter_lines():
+                    out.write(line)
+        else:
+            p.write_text(self.dumps())
         return p
 
 

@@ -39,10 +39,15 @@ class ClientPool:
         self.proximal_mu = proximal_mu
         self.seed = seed
         self._executor = None
+        # membership is fixed after construction, so the sorted id list is
+        # computed once — callers (and the interners memoizing on list
+        # identity) see one stable object instead of a fresh O(N log N)
+        # sort per access
+        self._client_ids = sorted(self.clients)
 
     @property
     def client_ids(self):
-        return sorted(self.clients)
+        return self._client_ids
 
     def num_samples(self, cid: str) -> int:
         return len(self.clients[cid].dataset)

@@ -59,7 +59,8 @@ from .client import ClientPool
 from .metrics import (bias, effective_update_ratio, weighted_accuracy,
                       windowed_update_ratio)
 from .scheduler import (RotationScheduler, Scheduler,
-                        StrategySelectScheduler)
+                        StrategySelectScheduler,
+                        scheduler_supports_exclude)
 
 Pytree = Any
 
@@ -544,16 +545,30 @@ class TrainingDriver:
             in_flight.add(cid)
             S["window"]["issued"].append(cid)
 
+        takes_exclude = scheduler_supports_exclude(self.scheduler)
+
         def propose(want: int, now: float) -> List[str]:
             """Ask the Scheduler for the next slot fill(s): the eligible
             pool excludes in-flight clients; rotation order, failure
-            backoff, and any scoring live inside the scheduler."""
-            eligible = [cid for cid in self.pool.client_ids
-                        if cid not in in_flight]
-            picks = self.scheduler.propose(eligible, want, now,
-                                           S["version"])
+            backoff, and any scoring live inside the scheduler.  With an
+            exclude-aware scheduler the full population is passed and
+            in-flight filtering happens vectorized inside — no O(N)
+            eligible list per refill (in_flight ⊆ pool, so the reported
+            pool size is unchanged)."""
+            pool_ids = self.pool.client_ids
+            if takes_exclude:
+                picks = self.scheduler.propose(pool_ids, want, now,
+                                               S["version"],
+                                               exclude=in_flight)
+                pool_size = len(pool_ids) - len(in_flight)
+            else:
+                eligible = [cid for cid in pool_ids
+                            if cid not in in_flight]
+                picks = self.scheduler.propose(eligible, want, now,
+                                               S["version"])
+                pool_size = len(eligible)
             self._record_scheduling(now, S["version"], want, picks,
-                                    len(eligible))
+                                    pool_size)
             return picks
 
         def refill(now: float) -> None:
@@ -800,7 +815,8 @@ class TrainingDriver:
             state["platform"] = self.platform.state_dict()
         if self.trace is not None:
             state["telemetry"] = self.trace.telemetry_state_dict()
-            state["trace_offset"] = len(self.trace.records)
+            state["trace_offset"] = getattr(self.trace, "record_count",
+                                            len(self.trace.records))
         if self.mode == "async":
             state["async"] = self._async_checkpoint_state()
         return state

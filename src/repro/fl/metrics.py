@@ -51,6 +51,34 @@ def trailing_straggler_ratio(stats: Sequence, window: int = 3) -> float:
     return wasted / selected
 
 
+class TrailingMetricsCache:
+    """Identity-keyed memo for the adaptive scheduler's trailing window.
+
+    `trailing_eur` / `trailing_straggler_ratio` only depend on the last
+    `window` RoundStats objects, so the pair is computed once per
+    distinct window and replayed for free on repeated `cohort_size`
+    calls against unchanged telemetry (async refills, re-entrant
+    sizing).  Delegates to the module functions — values are identical.
+    """
+
+    __slots__ = ("window", "_key", "_value")
+
+    def __init__(self, window: int = 3):
+        self.window = window
+        self._key: tuple = ()
+        self._value = (1.0, 0.0)
+
+    def compute(self, stats: Sequence) -> tuple:
+        """(trailing_eur, trailing_straggler_ratio) over `stats`."""
+        recent = list(stats)[-self.window:]
+        key = tuple(map(id, recent))
+        if key != self._key or not key:
+            self._value = (trailing_eur(recent, self.window),
+                           trailing_straggler_ratio(recent, self.window))
+            self._key = key
+        return self._value
+
+
 def time_to_accuracy(accuracy_curve: Sequence[tuple],
                      round_durations: Sequence[float],
                      target: float) -> float:

@@ -1,0 +1,284 @@
+"""Fleet-scale acceptance gates (store parity, interning, streaming
+traces, array-state round-trips) + slow-marked 10⁵ propose checks.
+
+The byte-parity tests are the contract of the array-backed store
+refactor: on seeded 20-client runs across all three training modes, the
+flat NumPy `ClientHistoryDB` + vectorized schedulers must reproduce the
+PR 5 dict implementation's traces and final params byte-for-byte (the
+goldens under tests/golden/ were generated on the dict code).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from fleet_parity_common import GOLDEN_DIR, SCENARIOS, run_scenario
+from repro.core.history import ClientHistoryDB
+from repro.core.interning import ClientInterner
+from repro.core.selection import select_clients
+from repro.faas.trace import TraceRecorder
+
+
+# ---------------------------------------------------------------------------
+# store parity vs the dict-backed goldens (all three training modes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", [s[0] for s in SCENARIOS])
+def test_store_parity_byte_identical(name):
+    trace_bytes, params_digest = run_scenario(name)
+    golden = (GOLDEN_DIR / f"{name}.jsonl").read_bytes()
+    digests = json.loads((GOLDEN_DIR / "params_digests.json").read_text())
+    assert trace_bytes == golden, f"{name}: trace diverged from golden"
+    assert params_digest == digests[name], f"{name}: final params diverged"
+
+
+# ---------------------------------------------------------------------------
+# interning table under register / miss / crash churn
+# ---------------------------------------------------------------------------
+
+def test_interner_indices_stable_under_churn():
+    rng = np.random.default_rng(0)
+    interner = ClientInterner()
+    first_seen = {}
+    for _ in range(200):
+        batch = [f"c{int(i):04d}" for i in rng.integers(0, 500, size=20)]
+        idx = interner.intern_many(batch)
+        for cid, i in zip(batch, idx):
+            assert first_seen.setdefault(cid, int(i)) == int(i), \
+                "an interned id changed index"
+    # dense, bijective, registration-ordered
+    assert sorted(first_seen.values()) == list(range(len(first_seen)))
+    for cid, i in first_seen.items():
+        assert interner.index_of(cid) == i
+        assert interner.id_of(i) == cid
+
+
+def test_interner_lex_ranks_match_id_order():
+    rng = np.random.default_rng(1)
+    ids = [f"client-{int(i):05d}" for i in rng.permutation(300)]
+    interner = ClientInterner(ids)
+    ranks = interner.lex_ranks()
+    by_rank = sorted(range(len(ids)), key=lambda i: ranks[i])
+    assert [interner.id_of(i) for i in by_rank] == sorted(ids)
+    # cache invalidates on growth
+    interner.intern("aaa-sorts-first")
+    ranks2 = interner.lex_ranks()
+    assert ranks2.size == len(ids) + 1
+    assert ranks2[interner.index_of("aaa-sorts-first")] == 0
+
+
+def test_interner_pool_memo_identity_and_invalidation():
+    interner = ClientInterner([f"c{i}" for i in range(10)])
+    pool = [f"c{i}" for i in range(10)]
+    a = interner.indices_for(pool)
+    assert interner.indices_for(pool) is a          # memo hit by identity
+    pool.append("c10")                              # length change → miss
+    b = interner.indices_for(pool)
+    assert b.size == 11
+    np.testing.assert_array_equal(b[:10], a)        # stable prefix
+
+
+def test_interner_state_roundtrip():
+    interner = ClientInterner([f"c{i}" for i in range(25)])
+    clone = ClientInterner()
+    clone.load_state_dict(interner.state_dict())
+    assert len(clone) == 25
+    assert all(clone.index_of(f"c{i}") == i for i in range(25))
+
+
+def test_interner_property_churn():
+    hypothesis = pytest.importorskip("hypothesis")
+    given, settings, st = (hypothesis.given, hypothesis.settings,
+                           hypothesis.strategies)
+
+    @settings(deadline=None, max_examples=50)
+    @given(st.lists(st.lists(st.integers(0, 99), min_size=1, max_size=10),
+                    max_size=20))
+    def run(batches):
+        interner = ClientInterner()
+        mirror = {}
+        for batch in batches:
+            ids = [f"c{i}" for i in batch]
+            idx = interner.intern_many(ids)
+            for cid, j in zip(ids, idx):
+                assert mirror.setdefault(cid, int(j)) == int(j)
+        assert sorted(mirror.values()) == list(range(len(mirror)))
+        assert len(interner) == len(mirror)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# array-backed history: behavioural churn + checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def _churned_db(n=40, rounds=12, seed=3):
+    """Mixed register / success / miss / crash / late-report history."""
+    rng = np.random.default_rng(seed)
+    ids = [f"c{i:03d}" for i in range(n)]
+    db = ClientHistoryDB()
+    db.ensure(ids[: n // 2])
+    for r in range(1, rounds + 1):
+        if r == 4:
+            db.ensure(ids)                          # late registrations
+        known = ids if r >= 4 else ids[: n // 2]
+        cohort = rng.choice(known, size=min(8, len(known)), replace=False)
+        for cid in cohort:
+            roll = rng.random()
+            if roll < 0.25:                         # miss / crash
+                db.get(cid).apply_miss(r)
+            elif roll < 0.35:                       # late report for r-1
+                db.client_report(cid, max(1, r - 1),
+                                 float(5.0 + 10.0 * rng.random()))
+            else:
+                db.mark_success(cid, r)
+                db.client_report(cid, r,
+                                 float(5.0 + 10.0 * rng.random()))
+    return db, ids
+
+
+def test_history_payload_roundtrip_rebuilds_array_state():
+    db, ids = _churned_db()
+    db2 = ClientHistoryDB()
+    db2.load_payload(db.to_payload())
+    idx = db.indices_for(ids)
+    idx2 = db2.indices_for(ids)
+    for name in ("_t_ema", "_t_ema32", "_t_max", "_tier", "_cooldown",
+                 "_n_times", "_n_missed", "_invocations"):
+        a, b = getattr(db, name), getattr(db2, name)
+        np.testing.assert_array_equal(
+            a[idx], b[idx2], err_msg=f"{name} diverged after round-trip")
+    # derived mirrors really are derived, not stale copies
+    np.testing.assert_array_equal(
+        db2._t_ema32[idx2], db2._t_ema[idx2].astype(np.float32))
+    # selection is identical on the restored store
+    plan_a = select_clients(db, ids, 13, 20, 6,
+                            np.random.default_rng(99))
+    plan_b = select_clients(db2, ids, 13, 20, 6,
+                            np.random.default_rng(99))
+    assert plan_a.selected == plan_b.selected
+    assert plan_a.rookies == plan_b.rookies
+    assert plan_a.straggler_clients == plan_b.straggler_clients
+
+
+def test_record_view_matches_array_columns():
+    db, ids = _churned_db(n=12, rounds=6, seed=5)
+    idx = db.indices_for(ids)
+    for cid, i in zip(ids, idx):
+        rec = db.get(cid)
+        times = rec.training_times
+        assert db._n_times[i] == len(times)
+        if times:
+            assert db._t_max[i] == max(times)
+        assert db._n_missed[i] == len(rec.missed_rounds)
+
+
+def test_apodotiko_state_roundtrip_rebuilds_f32_mirrors():
+    from repro.fl.scheduler import ApodotikoScheduler
+    ids = [f"c{i:02d}" for i in range(30)]
+    sched = ApodotikoScheduler(6, seed=0)
+    rng = np.random.default_rng(2)
+    for r in range(1, 8):
+        picked = sched.propose(ids, 6, float(r), r)
+        for cid in picked:
+            if rng.random() < 0.3:
+                sched.notify_miss(cid, float(r))
+            else:
+                sched.notify_finish(cid, float(r),
+                                    duration_s=float(rng.random() * 9),
+                                    cold=bool(rng.random() < 0.4))
+    clone = ApodotikoScheduler(6, seed=0)
+    clone.load_state_dict(sched.state_dict())
+    # the clone re-interns from the state dict, so compare per client id
+    # (the f32 score mirrors must be rebuilt, not left at init zeros)
+    for cid in ids:
+        i = sched._interner.lookup(cid)
+        j = clone._interner.lookup(cid)
+        if j < 0:
+            assert sched._dur32[i] == 0.0 and not sched._seen[i]
+            continue
+        assert clone._dur32[j] == sched._dur32[i], cid
+        assert clone._rate_succ[j] == sched._rate_succ[i], cid
+        assert clone._rate_cold[j] == sched._rate_cold[i], cid
+    assert clone.propose(ids, 6, 8.0, 8) == sched.propose(ids, 6, 8.0, 8)
+
+
+# ---------------------------------------------------------------------------
+# streaming / sharded TraceRecorder
+# ---------------------------------------------------------------------------
+
+def _emit_mixed_records(rec, n):
+    for i in range(n):
+        rec.attempt(client_id=f"c{i % 7}", platform="sim", round_number=i,
+                    attempt=0, start_time=float(i), arrival_time=i + 0.5,
+                    cold=(i % 3 == 0), cold_start_s=0.2, billed_s=1.5,
+                    status="ok" if i % 5 else "crash")
+        rec.billing(cost=0.001 * i, duration_s=1.5, kind="invocation",
+                    client_id=f"c{i % 7}", round_number=i)
+        if i % 4 == 0:
+            rec.scheduling(time=float(i), round_number=i, scheduler="t",
+                           mode="sync", want=2, selected=["a", "b"],
+                           pool_size=7)
+
+
+def test_streaming_trace_bytes_identical(tmp_path):
+    buffered = TraceRecorder()
+    streamed = TraceRecorder(stream_path=tmp_path / "t.jsonl",
+                             flush_every=16)
+    _emit_mixed_records(buffered, 100)
+    _emit_mixed_records(streamed, 100)
+    assert streamed._flushed > 0                    # actually streamed
+    assert streamed.dumps() == buffered.dumps()
+    assert streamed.record_count == buffered.record_count == 225
+    assert abs(streamed.billed_total() - buffered.billed_total()) == 0.0
+
+
+def test_streaming_trace_shard_rotation(tmp_path):
+    rec = TraceRecorder(stream_path=tmp_path / "t.jsonl",
+                        flush_every=8, shard_records=50)
+    _emit_mixed_records(rec, 100)
+    rec.flush()
+    shards = rec.shard_paths()
+    assert len(shards) > 1                          # rotated
+    assert all(p.name.startswith("t.") for p in shards)
+    per_shard = [sum(1 for _ in p.open()) for p in shards]
+    assert all(c <= 50 for c in per_shard)
+    assert sum(per_shard) == rec.record_count
+    # read-back surface spans every shard, in emission order
+    ref = TraceRecorder()
+    _emit_mixed_records(ref, 100)
+    assert rec.dumps() == ref.dumps()
+    assert rec.select("billing") == ref.select("billing")
+
+
+def test_streaming_to_jsonl_export_matches(tmp_path):
+    rec = TraceRecorder(stream_path=tmp_path / "s.jsonl", flush_every=4,
+                        shard_records=20)
+    _emit_mixed_records(rec, 30)
+    out = rec.to_jsonl(tmp_path / "export.jsonl")
+    ref = TraceRecorder()
+    _emit_mixed_records(ref, 30)
+    assert out.read_text() == ref.dumps()
+
+
+# ---------------------------------------------------------------------------
+# fleet-scale smoke (tier-2: excluded from tier-1 by the `slow` marker)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy",
+                         ["random", "fedlesscan", "apodotiko", "rotation"])
+def test_propose_at_100k_under_budget(policy):
+    import time
+
+    import benchmarks.bench_fleet_scale as B
+    db, ids = B.seed_history(100_000, seed=7)
+    sched = B.make_scheduler(policy, db, ids, 256, seed=7)
+    sched.propose(ids, 256, 1.0, 1)                 # warmup
+    times = []
+    for r in range(2, 7):
+        t0 = time.perf_counter()
+        cohort = sched.propose(ids, 256, float(r), r)
+        times.append(time.perf_counter() - t0)
+        assert len(cohort) == 256
+    assert sorted(times)[len(times) // 2] < 0.05    # the 10⁶ gate, at 10⁵
