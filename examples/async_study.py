@@ -18,9 +18,19 @@ with each named server optimizer on the merge pipeline (core/merge.py),
 so the table shows e.g. how FedAdam/FedYogi server updates interact with
 staleness-damped async pseudo-gradients.
 
+``--compression`` adds compressed-update rows (core/compress.py): every
+strategy is additionally run with each named codec on the client→server
+wire, and the table gains Δcost($)/ΔEUR columns against that strategy's
+plaintext run. Plaintext runs model the upload as free; compressed runs
+bill real egress bytes and transfer time, so Δcost($) is the wire cost
+the run now accounts for — tighter codecs (top-k) add less than looser
+ones (int8) — while ΔEUR shows whether the codec hurt update delivery.
+
     PYTHONPATH=src python examples/async_study.py [--ratio 0.3 --rounds 8]
     PYTHONPATH=src python examples/async_study.py --server-opt fedadam \
         --server-opt fedyogi
+    PYTHONPATH=src python examples/async_study.py --compression topk \
+        --compression int8
 """
 import argparse
 from pathlib import Path
@@ -55,13 +65,15 @@ SERVER_OPT_LR = {"sgd": 1.0, "fedavgm": 0.9, "fedadagrad": 0.1,
 
 
 def run_one(strategy: str, task, parts, test_parts, args,
-            trace_path: Path, server_opt: str = "sgd"):
+            trace_path: Path, server_opt: str = "sgd",
+            compress: str = "none"):
     cfg = ExperimentConfig(
         strategy=strategy, n_rounds=args.rounds,
         clients_per_round=args.cohort, eval_every=0, seed=args.seed,
         buffer_k=args.buffer_k, trace_path=str(trace_path),
         server_opt=server_opt,
         server_opt_lr=SERVER_OPT_LR.get(server_opt, 0.1),
+        compress_scheme=compress,
         scenario=ScenarioConfig(straggler_fraction=args.ratio,
                                 round_timeout_s=30.0, seed=args.seed))
     return run_experiment(task, parts, test_parts, cfg)
@@ -80,16 +92,32 @@ def main() -> None:
                     help="additional merge-pipeline server optimizers to "
                          "sweep (repeatable; 'sgd' — the identity — "
                          "always runs first)")
+    ap.add_argument("--compression", action="append", default=None,
+                    metavar="SCHEME", dest="compressions",
+                    help="update codecs to sweep (repeatable; 'topk' or "
+                         "'int8') — each adds a row per strategy with "
+                         "Δcost($)/ΔEUR against the plaintext run")
     ap.add_argument("--skip-determinism-check", action="store_true")
     args = ap.parse_args()
     server_opts = ["sgd"] + [o for o in (args.server_opts or [])
                              if o != "sgd"]
+    compressions = [c for c in (args.compressions or []) if c != "none"]
 
     task, parts, test_parts = build_task(args.clients, seed=args.seed)
     print(f"straggler ratio {int(args.ratio * 100)}%, "
           f"{args.rounds} rounds x cohort {args.cohort}\n")
-    print(f"{'strategy':12s} {'srv-opt':10s} {'mode':10s} {'acc':>6s} "
-          f"{'EUR':>5s} {'aggs':>5s} {'time(s)':>8s} {'cost($)':>8s}")
+    print(f"{'strategy':12s} {'srv-opt':10s} {'compress':9s} {'mode':10s} "
+          f"{'acc':>6s} {'EUR':>5s} {'aggs':>5s} {'time(s)':>8s} "
+          f"{'cost($)':>8s} {'Δcost($)':>9s} {'ΔEUR':>6s}")
+
+    def show(strategy, server_opt, compress, res, base=None):
+        delta = ("" if base is None else
+                 f"{res.total_cost - base.total_cost:+9.4f} "
+                 f"{res.mean_eur - base.mean_eur:+6.2f}")
+        print(f"{strategy:12s} {server_opt:10s} {compress:9s} "
+              f"{res.mode:10s} {res.final_accuracy:6.3f} "
+              f"{res.mean_eur:5.2f} {len(res.rounds):5d} "
+              f"{res.total_duration_s:8.0f} {res.total_cost:8.4f} {delta}")
 
     results = {}
     for strategy in STRATEGIES:
@@ -99,10 +127,12 @@ def main() -> None:
             res = run_one(strategy, task, parts, test_parts, args, trace,
                           server_opt=server_opt)
             results.setdefault(strategy, res)     # sgd row anchors checks
-            print(f"{strategy:12s} {server_opt:10s} {res.mode:10s} "
-                  f"{res.final_accuracy:6.3f} "
-                  f"{res.mean_eur:5.2f} {len(res.rounds):5d} "
-                  f"{res.total_duration_s:8.0f} {res.total_cost:8.4f}")
+            show(strategy, server_opt, "-", res)
+        for scheme in compressions:
+            trace = OUT / f"{strategy}_{scheme}.jsonl"
+            res = run_one(strategy, task, parts, test_parts, args, trace,
+                          compress=scheme)
+            show(strategy, "sgd", scheme, res, base=results[strategy])
 
     semi = results["fedlesscan"].mean_eur
     for name in ("fedasync", "fedbuff"):

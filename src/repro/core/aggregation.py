@@ -40,28 +40,45 @@ _KERNEL_WARNED = False
 
 @dataclass
 class ClientUpdate:
-    """One client's local model update as stored in the parameter server."""
+    """One client's local model update as stored in the parameter server.
+
+    When the client path runs update compression (core/compress.py),
+    `params` holds the server-side *decode* — the exact pytree the merge
+    consumes — and the wire size travels alongside as `payload_bytes`
+    (encoded) / `dense_bytes` (what the plaintext fp32 update would have
+    cost).  Both stay None on the uncompressed path so dense runs are
+    indistinguishable from pre-compression builds.
+    """
     client_id: str
     params: Pytree
     num_samples: int
     round_number: int          # t_k — the round the update was trained for
     training_time: float = 0.0
+    payload_bytes: Optional[int] = None    # encoded wire size (simulated)
+    dense_bytes: Optional[int] = None      # uncompressed fp32 wire size
 
 
 def update_to_record(update: ClientUpdate) -> dict:
     """JSON-ready metadata of one update (checkpoint surface) — the
     params pytree travels separately in the checkpoint's array store."""
-    return {"client_id": update.client_id,
-            "num_samples": update.num_samples,
-            "round_number": update.round_number,
-            "training_time": update.training_time}
+    rec = {"client_id": update.client_id,
+           "num_samples": update.num_samples,
+           "round_number": update.round_number,
+           "training_time": update.training_time}
+    # only-when-set: dense checkpoints stay byte-identical to older builds
+    if update.payload_bytes is not None:
+        rec["payload_bytes"] = update.payload_bytes
+        rec["dense_bytes"] = update.dense_bytes
+    return rec
 
 
 def update_from_record(rec: dict, params: Pytree) -> ClientUpdate:
     return ClientUpdate(params=params, client_id=rec["client_id"],
                         num_samples=rec["num_samples"],
                         round_number=rec["round_number"],
-                        training_time=rec.get("training_time", 0.0))
+                        training_time=rec.get("training_time", 0.0),
+                        payload_bytes=rec.get("payload_bytes"),
+                        dense_bytes=rec.get("dense_bytes"))
 
 
 @partial(jax.jit, static_argnums=())
@@ -101,26 +118,32 @@ def aggregate_reference(updates: Sequence[ClientUpdate],
 
 
 def _aggregate_flat(updates: Sequence[ClientUpdate],
-                    coeffs: np.ndarray) -> Pytree:
+                    coeffs: np.ndarray, mesh=None) -> Pytree:
     """Ravel K update pytrees into a (K, P) matrix and run the weighted
-    sum as one Pallas kernel dispatch, then unravel the result."""
-    from ..kernels import fed_agg   # deferred: kernels pull in pallas
+    sum as one Pallas kernel dispatch, then unravel the result.  With a
+    `mesh` of >1 devices the dispatch shards the P dim across it
+    (kernels.fed_agg_sharded)."""
+    from ..kernels import fed_agg, fed_agg_sharded   # deferred: pallas
 
     first, unravel = ravel_pytree(updates[0].params)
     mat = jnp.stack([first] + [ravel_pytree(u.params)[0]
                                for u in updates[1:]])
-    out = fed_agg(mat, jnp.asarray(coeffs, dtype=jnp.float32))
+    cf = jnp.asarray(coeffs, dtype=jnp.float32)
+    if mesh is not None and int(mesh.size) > 1:
+        out = fed_agg_sharded(mat, cf, mesh)
+    else:
+        out = fed_agg(mat, cf)
     return unravel(out.astype(first.dtype))
 
 
 def aggregate(updates: Sequence[ClientUpdate], coeffs: np.ndarray,
-              use_kernel: Optional[bool] = None) -> Pytree:
+              use_kernel: Optional[bool] = None, mesh=None) -> Pytree:
     """Weighted sum Σ_k c_k · W_k over client updates."""
     if use_kernel is None:
         use_kernel = _KERNEL_DEFAULT
     if use_kernel:
         try:
-            return _aggregate_flat(updates, coeffs)
+            return _aggregate_flat(updates, coeffs, mesh=mesh)
         except (TypeError, ValueError) as e:
             # exotic pytrees that ravel_pytree/stack can't flatten
             global _KERNEL_WARNED

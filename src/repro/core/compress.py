@@ -1,0 +1,171 @@
+"""Client-update compression with error feedback (the orchestrator).
+
+The kernels (kernels/compress.py) work on flat vectors; this module owns
+the FL semantics around them:
+
+* compression acts on the client's *delta* W_k − w, not the raw weights —
+  the server reconstructs W̃_k = w + decode(encode(δ_k)), so every
+  downstream merge (Eq. 3 staleness weights, the delta MergePipeline and
+  its server optimizers) consumes an ordinary ClientUpdate and stays
+  parity-correct against Reddi et al. (arXiv:2003.00295);
+* **error feedback** keeps a per-client residual: the input to the
+  encoder is δ_k + r_k and the new residual is what the encoder dropped,
+  r_k' = (δ_k + r_k) − decode(·).  Compression error therefore
+  telescopes instead of accumulating — the classic EF-SGD guarantee that
+  makes aggressive top-k ratios converge;
+* residual pytrees ride the v2 checkpoint array store exactly like the
+  server optimizer's moments do (``compress/residual/<cid>`` keys,
+  model-params tree structure, fp32-forced on load).
+
+``REPRO_COMPRESS=0`` disables encoding at runtime regardless of config —
+the kill switch mirrors ``REPRO_AGG_KERNEL``; the ``none`` scheme (the
+default) never touches the update, keeping dense runs byte-identical to
+pre-compression builds.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+Pytree = Any
+
+SCHEMES = ("none", "topk", "int8")
+
+# simulated wire-format costs (bytes)
+_FP32 = 4            # dense value
+_TOPK_ENTRY = 8      # int32 index + fp32 value per kept coordinate
+_INT8_CODE = 1       # one code byte per parameter
+_CHUNK_SCALE = 4     # one fp32 scale per chunk
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    """Which encoder the client path runs, and how hard it squeezes.
+
+    topk_ratio is the kept fraction (0.01 → top-k@1%, a 50× byte cut at
+    8 bytes/entry vs 4 bytes/param dense); chunk is the int8 scale
+    granularity (256 params/scale ≈ 1.016 bytes/param on the wire).
+    """
+    scheme: str = "none"
+    topk_ratio: float = 0.01
+    chunk: int = 256
+    error_feedback: bool = True
+
+    def normalized(self) -> "CompressionConfig":
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown compression scheme {self.scheme!r}; "
+                             f"available: {SCHEMES}")
+        if self.scheme == "topk" and not (0.0 < self.topk_ratio <= 1.0):
+            raise ValueError(f"topk_ratio must be in (0, 1], "
+                             f"got {self.topk_ratio}")
+        if self.scheme == "int8" and self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        return self
+
+    @property
+    def active(self) -> bool:
+        """True when encoding actually runs (scheme set + env not 0)."""
+        return (self.scheme != "none"
+                and os.environ.get("REPRO_COMPRESS", "1") != "0")
+
+
+class UpdateCompressor:
+    """Stateful client-side encoder: per-client error-feedback residuals
+    plus the payload-byte arithmetic the simulation bills."""
+
+    def __init__(self, config: Optional[CompressionConfig] = None):
+        self.config = (config or CompressionConfig()).normalized()
+        # cid -> flat fp32 residual (the coordinates the encoder dropped)
+        self._residuals: Dict[str, jnp.ndarray] = {}
+        self._unravel32 = None      # cached f32 unravel (model structure)
+
+    # ------------------------------------------------------------------
+    def encode(self, client_id: str, params: Pytree, global_params: Pytree
+               ) -> Tuple[Pytree, Optional[int], Optional[int]]:
+        """Compress one client update against the round's global model.
+
+        Returns ``(reconstructed_params, payload_bytes, dense_bytes)`` —
+        the reconstruction is the server-side decode W̃ = w + decode(δ̃),
+        i.e. exactly what a real server would hold after receiving the
+        encoded wire payload.  Inactive config → the update passes
+        through untouched with (None, None) byte counts.
+        """
+        if not self.config.active:
+            return params, None, None
+        from ..kernels import int8_decode, int8_encode, topk_encode
+
+        flat_u, unravel = ravel_pytree(params)
+        flat_g = ravel_pytree(global_params)[0].astype(jnp.float32)
+        if flat_u.shape != flat_g.shape:
+            raise ValueError(
+                f"update ravels to {flat_u.shape[0]} params, global model "
+                f"to {flat_g.shape[0]} — cannot compress the delta")
+        P = int(flat_u.shape[0])
+        dense_bytes = P * _FP32
+
+        delta = flat_u.astype(jnp.float32) - flat_g
+        residual = self._residuals.get(client_id)
+        if self.config.error_feedback and residual is not None:
+            inp = delta + residual
+        else:
+            inp = delta
+
+        if self.config.scheme == "topk":
+            k = max(1, min(P, int(round(P * self.config.topk_ratio))))
+            _, _, decoded = topk_encode(inp, k)
+            payload_bytes = k * _TOPK_ENTRY
+        else:                                                   # int8
+            q, scale = int8_encode(inp, chunk=self.config.chunk)
+            decoded = int8_decode(q, scale, P)
+            payload_bytes = (P * _INT8_CODE
+                             + int(q.shape[0]) * _CHUNK_SCALE)
+
+        if self.config.error_feedback:
+            self._residuals[client_id] = inp - decoded
+        if self._unravel32 is None:
+            _, self._unravel32 = ravel_pytree(
+                jax.tree_util.tree_map(
+                    lambda l: jnp.zeros(jnp.shape(l), jnp.float32),
+                    global_params))
+        recon = unravel((flat_g + decoded).astype(flat_u.dtype))
+        return recon, payload_bytes, dense_bytes
+
+    # ---- checkpoint surface (fl/checkpointing.py) --------------------
+    def state_dict(self, arrays: Optional[dict] = None) -> dict:
+        """Residuals go into `arrays` as model-structured fp32 pytrees
+        (``compress/residual/<cid>``) — the same array-store contract as
+        the merge pipeline's server-opt moments."""
+        arrays = {} if arrays is None else arrays
+        cids = sorted(self._residuals)
+        for cid in cids:
+            arrays[f"compress/residual/{cid}"] = self._unravel32(
+                self._residuals[cid])
+        return {"scheme": self.config.scheme, "clients": cids}
+
+    def load_state_dict(self, state: dict,
+                        arrays: Optional[dict] = None) -> None:
+        """Missing residual state restores as a fresh encoder (residuals
+        re-accumulate from the resume point — same migration contract as
+        the server optimizer's moments)."""
+        arrays = {} if arrays is None else arrays
+        if not state:
+            return
+        scheme = state.get("scheme")
+        if scheme is not None and scheme != self.config.scheme:
+            raise ValueError(f"checkpoint was written with compression "
+                             f"scheme {scheme!r}, run uses "
+                             f"{self.config.scheme!r}")
+        self._residuals = {}
+        for cid in state.get("clients", []):
+            tree = arrays[f"compress/residual/{cid}"]
+            flat, unravel32 = ravel_pytree(
+                jax.tree_util.tree_map(
+                    lambda l: jnp.asarray(l, jnp.float32), tree))
+            self._residuals[cid] = flat
+            if self._unravel32 is None:
+                self._unravel32 = unravel32

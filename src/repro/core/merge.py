@@ -91,9 +91,14 @@ class MergePipeline:
     """Delta-based merge: weighted sum → pseudo-gradient → server opt."""
 
     def __init__(self, config: Optional[ServerOptConfig] = None,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 mesh=None):
         self.config = (config or ServerOptConfig()).normalized()
         self.use_kernel = use_kernel    # None → REPRO_AGG_KERNEL env
+        # jax.sharding.Mesh (>1 devices) → the flat weighted-sum and
+        # fused-apply dispatches shard the P dim across it (shard_map);
+        # None keeps the single-device path bit-for-bit
+        self.mesh = mesh
         self.steps = 0                  # server-optimizer steps taken
         self.last_update_norm: Optional[float] = None   # ‖Δ‖₂
         self._m: Optional[Pytree] = None    # fp32 moment pytrees,
@@ -143,7 +148,8 @@ class MergePipeline:
                         coeffs: np.ndarray, mix: float) -> Pytree:
         if mix >= 1.0:
             # w' = w + (Σ c·W − w) = Σ c·W — the exact pre-pipeline call
-            return aggregate(updates, coeffs, use_kernel=self.use_kernel)
+            return aggregate(updates, coeffs, use_kernel=self.use_kernel,
+                             mesh=self.mesh)
         if global_params is None:
             raise ValueError("mix < 1 folds the global model in as an "
                              "anchor; global params are required")
@@ -151,7 +157,7 @@ class MergePipeline:
                               round_number=updates[0].round_number)
         folded = np.concatenate(([1.0 - mix], mix * coeffs))
         return aggregate([anchor] + updates, folded,
-                         use_kernel=self.use_kernel)
+                         use_kernel=self.use_kernel, mesh=self.mesh)
 
     # ---- optimizer path ----------------------------------------------
     def _merge_opt(self, global_params, updates: List[ClientUpdate],
@@ -173,7 +179,8 @@ class MergePipeline:
         return c.lr, b1, c.b2, c.eps
 
     def _apply_kernel(self, global_params, updates, coeffs, mix):
-        from ..kernels import fed_agg_apply   # deferred: pulls in pallas
+        # deferred import: kernels pull in pallas
+        from ..kernels import fed_agg_apply, fed_agg_apply_sharded
 
         flat_g, unravel = ravel_pytree(global_params)
         mat = jnp.stack([ravel_pytree(u.params)[0] for u in updates])
@@ -188,9 +195,15 @@ class MergePipeline:
         flat_m = (ravel_pytree(self._m)[0] if self._m is not None else zero)
         flat_v = (ravel_pytree(self._v)[0] if self._v is not None else zero)
         lr, b1, b2, eps = self._kernel_scalars()
-        out, m_new, v_new, norm = fed_agg_apply(
-            mat, jnp.asarray(coeffs, dtype=jnp.float32), flat_g,
-            flat_m, flat_v, lr, mix, b1, b2, eps, opt=self.config.name)
+        if self.mesh is not None and int(self.mesh.size) > 1:
+            out, m_new, v_new, norm = fed_agg_apply_sharded(
+                mat, jnp.asarray(coeffs, dtype=jnp.float32), flat_g,
+                flat_m, flat_v, lr, mix, b1, b2, eps,
+                opt=self.config.name, mesh=self.mesh)
+        else:
+            out, m_new, v_new, norm = fed_agg_apply(
+                mat, jnp.asarray(coeffs, dtype=jnp.float32), flat_g,
+                flat_m, flat_v, lr, mix, b1, b2, eps, opt=self.config.name)
         # moments unravel through an f32 view of the params structure:
         # the params-derived `unravel` would round-trip every leaf via
         # the param dtype, silently quantizing fp32 moment state for

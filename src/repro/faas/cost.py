@@ -29,7 +29,16 @@ class PriceBook:
     vcpu_second: float = 0.0000240
     gib_second: float = 0.0000025
     per_invocation: float = 0.40 / 1_000_000
+    # internet egress for the client's update upload (GCP premium tier,
+    # first TiB); only billed when updates carry a simulated wire size
+    egress_per_gib: float = 0.12
     free_tier: bool = False  # paper reports raw costs, no free tier
+
+
+def egress_cost(payload_bytes: int,
+                prices: PriceBook = PriceBook()) -> float:
+    """Cost of shipping one encoded client update to the server."""
+    return (payload_bytes / 2**30) * prices.egress_per_gib
 
 
 @dataclass
@@ -124,6 +133,17 @@ class CostMeter:
         c = invocation_cost(duration_s, self.shape, self.prices,
                             self.allowance)
         return self._record(c, duration_s, kind, client_id, round_number)
+
+    def charge_egress(self, payload_bytes: Optional[int],
+                      client_id: Optional[str] = None,
+                      round_number=None) -> float:
+        """Bill one update upload's egress.  None (dense runs) is a free
+        no-op with no billing record — the compressed-vs-plaintext trace
+        diff is exactly the egress lines."""
+        if payload_bytes is None:
+            return 0.0
+        c = egress_cost(payload_bytes, self.prices)
+        return self._record(c, 0.0, "egress", client_id, round_number)
 
     def charge_straggler(self, round_duration_s: float,
                          client_id: Optional[str] = None,

@@ -143,6 +143,12 @@ class InvocationEngine:
         if self.recorder is None:
             return
         outcome = plan.to_outcome()
+        # compressed runs stamp the attempt with its simulated wire size;
+        # dense updates keep payload None and the record's key set stays
+        # exactly the legacy one (byte-parity with pre-compression traces)
+        cached = st.work.get(cid)
+        payload = (cached[0].payload_bytes
+                   if cached is not None and cached[0] is not None else None)
         # the platform captured at _start time: platform_of() may be a
         # *mutating* routing call (TelemetryRoutingPolicy can re-route),
         # so it must not be re-resolved as a side effect of logging
@@ -151,7 +157,8 @@ class InvocationEngine:
             round_number=st.round_number, attempt=attempt,
             start_time=plan.start_time, arrival_time=arrival_time,
             cold=plan.cold, cold_start_s=plan.cold_start_s,
-            billed_s=outcome.duration_s, status=status)
+            billed_s=outcome.duration_s, status=status,
+            payload_bytes=payload)
 
     # ------------------------------------------------------------------
     def open_round(self, queue: EventQueue, client_ids: Sequence[str],
@@ -218,8 +225,18 @@ class InvocationEngine:
                 cid, st.global_params, st.round_number)
             st.work[cid] = (update, nominal_s)
 
+        # compressed updates carry their simulated wire size — the upload
+        # rides inside the invocation window, so the platform's timeout /
+        # speed-scaling / billing math all see the transfer term (dense
+        # updates have payload_bytes None: zero-size legacy behaviour)
+        work_s = nominal_s
+        if update is not None and update.payload_bytes is not None:
+            bw = platform.config.upload_bandwidth_bps
+            if bw > 0:
+                work_s = nominal_s + update.payload_bytes / bw
+
         attempt = st.attempts.get(cid, 0)
-        plan = platform.plan_invocation(cid, nominal_s, event.time, profile,
+        plan = platform.plan_invocation(cid, work_s, event.time, profile,
                                         attempt=attempt)
         scheduled: list = []
         if plan.cold and plan.cold_start_s > 0:

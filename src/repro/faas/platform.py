@@ -41,6 +41,10 @@ class FaaSConfig:
     failure_rate: float = 0.0005         # 1 − SLO(99.95%)
     network_jitter_s: float = 0.5        # invocation + result upload jitter
     function_timeout_s: float = 540.0    # platform kill limit (paper config)
+    # client→server update-upload bandwidth; only consulted when an update
+    # carries a simulated wire size (compression on), so dense runs never
+    # see a transfer term and stay byte-identical
+    upload_bandwidth_bps: float = 16e6   # ~16 MB/s function egress
 
 
 @dataclass

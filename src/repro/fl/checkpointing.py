@@ -232,10 +232,12 @@ class RoundCheckpointer:
         params = _unflatten_like(data, "params", like_params)
         # every extra tree shares the model-params structure (round
         # params, cached client updates, pending/buffered updates);
-        # server-optimizer moments stay fp32 regardless of params dtype
+        # server-optimizer moments and compression error-feedback
+        # residuals stay fp32 regardless of params dtype
         arrays = {key: _unflatten_like(
             data, f"extra{_SEP}{key}", like_params,
-            force_dtype=(np.float32 if key.startswith("server_opt/")
+            force_dtype=(np.float32
+                         if key.startswith(("server_opt/", "compress/"))
                          else None))
             for key in state.get("array_keys", [])}
         return params, arrays

@@ -246,7 +246,8 @@ class TrainingDriver:
               f"cost=${stats.cost:.4f}{acc}")
 
     def _record_aggregation(self, time: float, round_number: int,
-                            merged: int) -> None:
+                            merged: int, payload_bytes: Optional[int] = None,
+                            dense_bytes: Optional[int] = None) -> None:
         if self.trace is None:
             return
         extra = {}
@@ -258,6 +259,14 @@ class TrainingDriver:
             extra = {"server_opt": merger.config.name,
                      "server_steps": merger.steps,
                      "update_norm": merger.last_update_norm}
+        if payload_bytes is not None:
+            # compressed-update telemetry: total encoded wire bytes that
+            # fed this merge and the achieved ratio vs dense fp32; dense
+            # runs carry no payload and the record keeps its legacy keys
+            extra["payload_bytes"] = int(payload_bytes)
+            if dense_bytes:
+                extra["compression_ratio"] = round(
+                    float(dense_bytes) / float(payload_bytes), 4)
         self.trace.aggregation(time=time, round_number=round_number,
                                merged=merged,
                                strategy=self.strategy.name,
@@ -295,10 +304,11 @@ class TrainingDriver:
         return self.pool.batch_work_fn(alive, global_params, round_number)
 
     def _handle_straggler(self, completion: ClientCompletion,
-                          arrival_time: float, current_round: int) -> None:
+                          arrival_time: float, current_round: int) -> float:
         """A client from an earlier round finished mid-flight: record its
         (client-side) report now and hand the update to the strategy at
-        its true virtual arrival time (Alg. 1 lines 16-27)."""
+        its true virtual arrival time (Alg. 1 lines 16-27).  Returns the
+        egress cost of its (late) update upload."""
         out = completion.outcome
         self.history.client_report(out.client_id, completion.round_number,
                                    out.duration_s)
@@ -309,6 +319,16 @@ class TrainingDriver:
             completion.update, arrival_time=arrival_time,
             producing_round=completion.round_number,
             current_round=current_round)
+        return self._charge_egress(completion.update, out.client_id,
+                                   current_round)
+
+    def _charge_egress(self, update, client_id: str, round_number) -> float:
+        """Bill the update's encoded upload (no-op for dense updates)."""
+        if update is None or update.payload_bytes is None:
+            return 0.0
+        return self.cost.charge_egress(update.payload_bytes,
+                                       client_id=client_id,
+                                       round_number=round_number)
 
     def _bill_attempts(self, completion: ClientCompletion,
                        round_number: int) -> float:
@@ -372,7 +392,8 @@ class TrainingDriver:
                 round_cost += self._bill_attempts(completion, round_number)
                 if completion.success:
                     straggler_arrivals.append(completion.client_id)
-                    self._handle_straggler(completion, ev.time, round_number)
+                    round_cost += self._handle_straggler(completion, ev.time,
+                                                         round_number)
                 continue
             round_cost += self._bill_attempts(completion, round_number)
             retries += completion.attempts - 1
@@ -420,6 +441,9 @@ class TrainingDriver:
             round_cost += self.cost.charge(out.duration_s,
                                            client_id=out.client_id,
                                            round_number=round_number)
+            # compressed runs also pay for shipping the encoded update
+            round_cost += self._charge_egress(comp.update, out.client_id,
+                                              round_number)
         for cid in late_ids:
             # alive but past the deadline: a miss now; its report and its
             # update arrive with its CLIENT_FINISH event in a later round
@@ -455,8 +479,17 @@ class TrainingDriver:
                                                  now=close_time)
         if new_params is None:
             new_params = global_params
+        # wire-size telemetry for the aggregation record: every update the
+        # strategy received this round (in-time + straggler arrivals);
+        # dense updates carry no payload, so legacy records are unchanged
+        carried = [u for u in updates if u.payload_bytes is not None]
+        payload_total = (sum(u.payload_bytes for u in carried)
+                         if carried else None)
+        dense_total = sum(u.dense_bytes or 0 for u in carried)
         self._record_aggregation(close_time, round_number,
-                                 self.strategy.last_aggregate_count)
+                                 self.strategy.last_aggregate_count,
+                                 payload_bytes=payload_total,
+                                 dense_bytes=dense_total)
 
         crashed_ids = ([c.outcome.client_id for c in failed]
                        + dead_ids + unstarted)
@@ -595,7 +628,13 @@ class TrainingDriver:
                 aggregated_updates=merged, retries=window["retries"],
                 straggler_arrivals=list(window["straggler_arrivals"]))
             if aggregated:
-                self._record_aggregation(now, stats.round_number, merged)
+                # payload counters only exist in windows that saw at least
+                # one encoded update (.get keeps restored pre-compression
+                # window snapshots loading unchanged)
+                self._record_aggregation(
+                    now, stats.round_number, merged,
+                    payload_bytes=window.get("payload_bytes"),
+                    dense_bytes=window.get("dense_bytes"))
             # eval cadence matches the barrier modes: every eval_every
             # rounds' worth of delivered updates, not every window (a
             # FedAsync window is a single update)
@@ -702,6 +741,7 @@ class TrainingDriver:
             out = completion.outcome
             self.cost.charge(out.duration_s, client_id=cid,
                              round_number=S["version"])
+            self._charge_egress(completion.update, cid, S["version"])
             # client-side report corrects the miss a late ticket recorded
             self.history.client_report(cid, info.version, out.duration_s)
             if not info.replaced:
@@ -717,6 +757,16 @@ class TrainingDriver:
 
             S["delivered_total"] += 1
             S["window"]["delivered"].append(cid)
+            upd = completion.update
+            if upd is not None and upd.payload_bytes is not None:
+                # wire-size tally for this window's aggregation record —
+                # keys appear only when compression is on, so dense-run
+                # windows (and their checkpoints) keep their legacy shape
+                w = S["window"]
+                w["payload_bytes"] = (w.get("payload_bytes", 0)
+                                      + upd.payload_bytes)
+                w["dense_bytes"] = (w.get("dense_bytes", 0)
+                                    + (upd.dense_bytes or 0))
             new_params = self.strategy.on_client_finish(
                 completion.update, arrival_time=ev.time,
                 producing_round=info.version, current_round=S["version"],
@@ -806,6 +856,11 @@ class TrainingDriver:
             "engine": self.engine.state_dict(arrays),
             "next_ticket": self._next_ticket,
         }
+        compressor = getattr(self.pool, "compressor", None)
+        if compressor is not None and compressor.config.active:
+            # client-side error-feedback residuals ride the checkpoint's
+            # array store like server-opt moments; dense runs add nothing
+            state["compressor"] = compressor.state_dict(arrays)
         fleet = getattr(self.invoker, "fleet", None)
         if fleet is not None:
             # multi-provider runs: every platform's RNG/warm pool plus
@@ -869,6 +924,10 @@ class TrainingDriver:
         self._recent_stats = [RoundStats(**d)
                               for d in state.get("recent_stats", [])]
         self._next_ticket = int(state.get("next_ticket", self._next_ticket))
+        if "compressor" in state:
+            compressor = getattr(self.pool, "compressor", None)
+            if compressor is not None:
+                compressor.load_state_dict(state["compressor"], arrays)
         fleet = getattr(self.invoker, "fleet", None)
         if "fleet" in state and fleet is not None:
             fleet.load_state_dict(state["fleet"])

@@ -32,7 +32,6 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from ..core.aggregation import ClientUpdate
 from ..optim import apply_updates, proximal_grad
 
 Pytree = Any
@@ -159,9 +158,10 @@ class VectorizedExecutor:
             for cid in group_cids:
                 params, _loss = trained[cid]
                 ds = pool.clients[cid].dataset
-                update = ClientUpdate(
-                    client_id=cid, params=params, num_samples=len(ds),
-                    round_number=round_number)
+                # pool.package_update runs the optional compression stage
+                # (same hook as the eager work_fn path)
+                update = pool.package_update(cid, params, round_number,
+                                             global_params)
                 results[cid] = (update,
                                 self.task.nominal_work_seconds(ds))
         return results

@@ -97,6 +97,19 @@ class ExperimentConfig:
     server_opt_b1: float = 0.9
     server_opt_b2: float = 0.99
     server_opt_eps: float = 1e-3
+    # client update compression (core/compress.UpdateCompressor): "none"
+    # (dense — byte-identical legacy traces), "topk" (top-k magnitude
+    # sparsification of the delta), or "int8" (per-chunk-scaled int8
+    # quantization), with error-feedback residuals on by default;
+    # REPRO_COMPRESS=0 force-disables any scheme at run time
+    compress_scheme: str = "none"
+    compress_topk_ratio: float = 0.01
+    compress_chunk: int = 256
+    compress_error_feedback: bool = True
+    # mesh-sharded merge: shard the aggregation/server-update kernels
+    # over this many host devices (0/1 → single-device; >1 requires
+    # XLA_FLAGS=--xla_force_host_platform_device_count≥N or real devices)
+    merge_devices: int = 0
 
 
 def make_straggler_profiles(client_ids, scenario: ScenarioConfig
@@ -146,8 +159,22 @@ def run_experiment(task: ClassificationTask,
                              seed=config.seed)
 
     recorder = TraceRecorder() if config.trace_path else None
+    compressor = None
+    if config.compress_scheme != "none":
+        from ..core.compress import CompressionConfig, UpdateCompressor
+        compressor = UpdateCompressor(CompressionConfig(
+            scheme=config.compress_scheme,
+            topk_ratio=config.compress_topk_ratio,
+            chunk=config.compress_chunk,
+            error_feedback=config.compress_error_feedback))
     pool = ClientPool(task, train_partitions, test_partitions,
-                      proximal_mu=strategy.proximal_mu(), seed=config.seed)
+                      proximal_mu=strategy.proximal_mu(), seed=config.seed,
+                      compressor=compressor)
+    if config.merge_devices and config.merge_devices > 1:
+        # shard the merge kernels over host devices; the mesh clamps to
+        # however many devices actually exist (single device → fallback)
+        from ..launch.mesh import make_host_mesh
+        strategy.merger.mesh = make_host_mesh(data=config.merge_devices)
     profiles = make_straggler_profiles(pool.client_ids, config.scenario)
     if config.platforms is not None:
         from ..faas.profiles import MultiPlatformInvoker

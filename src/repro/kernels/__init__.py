@@ -6,10 +6,20 @@
   fed_agg         — staleness-weighted federated aggregation (Eq. 3)
   fed_agg_apply   — fused weighted-sum → pseudo-gradient → server-
                     optimizer moment update → apply (core/merge.py)
+  *_sharded       — the same two under shard_map on a device mesh
+                    (P dim split over every mesh axis)
+  int8_*/topk_*   — client-update compression encode/decode pair
+                    (per-chunk int8 quantization, top-k sparsification)
 """
+from .compress import COMPRESS_SCHEMES
 from .fed_agg import APPLY_OPTS
-from .ops import fed_agg, fed_agg_apply, flash_attention, ssd_scan
+from .ops import (fed_agg, fed_agg_apply, fed_agg_apply_sharded,
+                  fed_agg_sharded, flash_attention, int8_decode,
+                  int8_encode, ssd_scan, topk_decode, topk_encode,
+                  topk_mask)
 from . import ref
 
-__all__ = ["APPLY_OPTS", "fed_agg", "fed_agg_apply", "flash_attention",
-           "ssd_scan", "ref"]
+__all__ = ["APPLY_OPTS", "COMPRESS_SCHEMES", "fed_agg", "fed_agg_apply",
+           "fed_agg_apply_sharded", "fed_agg_sharded", "flash_attention",
+           "int8_decode", "int8_encode", "ssd_scan", "topk_decode",
+           "topk_encode", "topk_mask", "ref"]

@@ -16,6 +16,12 @@ plus a per-tile Σ Δ² side output so ‖Δ‖₂ diagnostics cost no extra pas
 The optimizer family is a *static* argument (the branch is resolved at
 trace time); the hyperparameters (lr, mix, β₁, β₂, ε) travel as a tiny
 runtime vector so staleness-dependent mixing rates never retrace.
+
+`fed_agg_sharded` / `fed_agg_apply_sharded` dispatch the same kernels
+under shard_map on a device mesh: the flat P dim is split over every
+mesh axis (sharding/rules.merge_axes), each device runs the kernel on
+its slab, and only the scalar ‖Δ‖² crosses the mesh (one psum) — the
+merge itself is embarrassingly parallel along P.
 """
 from __future__ import annotations
 
@@ -24,6 +30,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 # optimizer families the fused apply kernel can lower; "sgd"/"fedavgm"
 # share the heavy-ball branch (momentum 0 reduces to plain server-SGD)
@@ -167,3 +175,75 @@ def fed_agg_apply(updates: jnp.ndarray, coeffs: jnp.ndarray,
     )(scal, coeffs2, updates, g2, m2, v2)
     norm = jnp.sqrt(jnp.sum(sq))
     return out[0, :P], m_new[0, :P], v_new[0, :P], norm
+
+
+# ------------------------------------------------------------ sharded
+def _pad_p(arr: jnp.ndarray, mult: int) -> jnp.ndarray:
+    """Zero-pad the trailing (P) dim to a multiple of ``mult``."""
+    pad = (-arr.shape[-1]) % mult
+    if not pad:
+        return arr
+    width = [(0, 0)] * (arr.ndim - 1) + [(0, pad)]
+    return jnp.pad(arr, width)
+
+
+def fed_agg_sharded(updates: jnp.ndarray, coeffs: jnp.ndarray, mesh,
+                    tile_p: int = 2048,
+                    interpret: bool = True) -> jnp.ndarray:
+    """fed_agg with the P dim sharded over every axis of ``mesh``.
+
+    updates (K, P) shard as (replicated, all-axes); coeffs replicate; the
+    output gathers back to a dense (P,).  Zero padding up to the device
+    count is numerically inert (0·c contributes 0).
+    """
+    axes = tuple(mesh.shape.keys())
+    n = int(mesh.size)
+    if n <= 1:
+        return fed_agg(updates, coeffs, tile_p=tile_p, interpret=interpret)
+    Pdim = updates.shape[1]
+    upd = _pad_p(updates, n)
+
+    f = shard_map(
+        functools.partial(fed_agg, tile_p=tile_p, interpret=interpret),
+        mesh=mesh,
+        in_specs=(P(None, axes), P(None)),
+        out_specs=P(axes), check_rep=False)
+    return f(upd, coeffs)[:Pdim]
+
+
+def fed_agg_apply_sharded(updates: jnp.ndarray, coeffs: jnp.ndarray,
+                          params: jnp.ndarray, m: jnp.ndarray,
+                          v: jnp.ndarray, lr, mix, b1, b2, eps, *,
+                          opt: str = "fedadam", mesh,
+                          tile_p: int = 2048, interpret: bool = True):
+    """fed_agg_apply with the P dim sharded over every axis of ``mesh``.
+
+    Each device owns a P slab of updates/params/moments and runs the
+    fused kernel locally; the only cross-device traffic is the scalar
+    Σ Δ² psum for the update-norm diagnostic.  Zero-padded slab tails
+    keep params/moments/Δ at exact 0 (see the kernel docstring), so the
+    sharded result matches the single-device merge to fp32 tolerance.
+    """
+    axes = tuple(mesh.shape.keys())
+    n = int(mesh.size)
+    if n <= 1:
+        return fed_agg_apply(updates, coeffs, params, m, v,
+                             lr, mix, b1, b2, eps, opt=opt,
+                             tile_p=tile_p, interpret=interpret)
+    Pdim = updates.shape[1]
+    upd = _pad_p(updates, n)
+    g2, m2, v2 = (_pad_p(x.astype(jnp.float32), n) for x in (params, m, v))
+
+    def local(u, c, g, mm, vv):
+        out, m_new, v_new, norm = fed_agg_apply(
+            u, c, g, mm, vv, lr, mix, b1, b2, eps, opt=opt,
+            tile_p=tile_p, interpret=interpret)
+        sumsq = jax.lax.psum(norm * norm, axes)
+        return out, m_new, v_new, jnp.sqrt(sumsq)
+
+    vec = P(axes)
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(P(None, axes), P(None), vec, vec, vec),
+                  out_specs=(vec, vec, vec, P()), check_rep=False)
+    out, m_new, v_new, norm = f(upd, coeffs, g2, m2, v2)
+    return out[:Pdim], m_new[:Pdim], v_new[:Pdim], norm

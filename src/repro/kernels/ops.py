@@ -13,8 +13,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .compress import int8_decode as _int8_decode
+from .compress import int8_encode as _int8_encode
+from .compress import topk_decode, topk_encode as _topk_encode
+from .compress import topk_mask as _topk_mask
 from .fed_agg import fed_agg as _fed_agg
 from .fed_agg import fed_agg_apply as _fed_agg_apply
+from .fed_agg import fed_agg_apply_sharded as _fed_agg_apply_sharded
+from .fed_agg import fed_agg_sharded as _fed_agg_sharded
 from .flash_attention import flash_attention as _flash_attention
 from .ssd_scan import ssd_scan as _ssd_scan
 
@@ -38,6 +44,54 @@ def fed_agg_apply(updates: jnp.ndarray, coeffs: jnp.ndarray,
         updates, coeffs, params, m, v, lr, mix, b1, b2, eps, opt=opt,
         tile_p=tile_p,
         interpret=INTERPRET if interpret is None else interpret)
+
+
+def fed_agg_sharded(updates: jnp.ndarray, coeffs: jnp.ndarray, mesh,
+                    tile_p: int = 2048,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _fed_agg_sharded(
+        updates, coeffs, mesh, tile_p=tile_p,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def fed_agg_apply_sharded(updates: jnp.ndarray, coeffs: jnp.ndarray,
+                          params: jnp.ndarray, m: jnp.ndarray,
+                          v: jnp.ndarray, lr, mix, b1, b2, eps, *,
+                          opt: str = "fedadam", mesh, tile_p: int = 2048,
+                          interpret: Optional[bool] = None):
+    return _fed_agg_apply_sharded(
+        updates, coeffs, params, m, v, lr, mix, b1, b2, eps, opt=opt,
+        mesh=mesh, tile_p=tile_p,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def int8_encode(x: jnp.ndarray, chunk: int = 256, tile_r: int = 8,
+                interpret: Optional[bool] = None):
+    return _int8_encode(x, chunk=chunk, tile_r=tile_r,
+                        interpret=INTERPRET if interpret is None
+                        else interpret)
+
+
+def int8_decode(q: jnp.ndarray, scale: jnp.ndarray, length: int,
+                tile_r: int = 8,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _int8_decode(q, scale, length, tile_r=tile_r,
+                        interpret=INTERPRET if interpret is None
+                        else interpret)
+
+
+def topk_encode(x: jnp.ndarray, k: int, tile_p: int = 2048,
+                interpret: Optional[bool] = None):
+    return _topk_encode(x, k, tile_p=tile_p,
+                        interpret=INTERPRET if interpret is None
+                        else interpret)
+
+
+def topk_mask(x: jnp.ndarray, tau, last_keep, tile_p: int = 2048,
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _topk_mask(x, tau, last_keep, tile_p=tile_p,
+                      interpret=INTERPRET if interpret is None
+                      else interpret)
 
 
 def flash_attention(q, k, v, causal: bool = True,

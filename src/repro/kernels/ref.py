@@ -53,6 +53,39 @@ def fed_agg_apply_ref(updates: jnp.ndarray, coeffs: jnp.ndarray,
     return g + lr * step, m, v, jnp.sqrt(jnp.sum(delta * delta))
 
 
+# ------------------------------------------------------------ compress
+def int8_encode_ref(x: jnp.ndarray, chunk: int = 256):
+    """Per-chunk int8 quantization oracle: scale = absmax/127 (1.0 for
+    all-zero chunks), q = round(x/scale) clipped to ±127.  Returns
+    (q (n_chunks, chunk) int8, scale (n_chunks,) f32)."""
+    P = x.shape[0]
+    n_chunks = -(-P // chunk)
+    xm = jnp.pad(x.astype(jnp.float32),
+                 (0, n_chunks * chunk - P)).reshape(n_chunks, chunk)
+    absmax = jnp.max(jnp.abs(xm), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xm / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def int8_decode_ref(q: jnp.ndarray, scale: jnp.ndarray,
+                    length: int) -> jnp.ndarray:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[:, None]).reshape(-1)[:length]
+
+
+def topk_ref(x: jnp.ndarray, k: int):
+    """Dense top-k decode oracle via lax.top_k + scatter (lowest index
+    wins on magnitude ties).  Returns (idx, vals, decoded)."""
+    xf = x.astype(jnp.float32)
+    P = xf.shape[0]
+    k = min(k, P)
+    _, idx = jax.lax.top_k(jnp.abs(xf), k)
+    vals = xf[idx]
+    decoded = jnp.zeros((P,), jnp.float32).at[idx].set(vals)
+    return idx.astype(jnp.int32), vals, decoded
+
+
 # ------------------------------------------------------------ attention
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True,

@@ -68,6 +68,23 @@ def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape.keys())
 
 
+def merge_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes the flat server-merge shards over: ALL of them.
+
+    The merge operates on a raveled (P,) view with no tensor structure
+    left, so FSDP-vs-TP distinctions are moot — the P dim simply splits
+    across every device (kernels/fed_agg.fed_agg_apply_sharded)."""
+    return tuple(mesh.shape.keys())
+
+
+def merge_spec(mesh: Mesh) -> P:
+    """PartitionSpec for a flat (P,) merge vector on ``mesh``."""
+    axes = merge_axes(mesh)
+    if not axes:
+        return P()
+    return P(axes if len(axes) > 1 else axes[0])
+
+
 def _pick_spec(shape: Sequence[int], mesh: Mesh,
                model_cands: Sequence[int], data_cands: Sequence[int],
                model_axis: str = "model") -> P:
