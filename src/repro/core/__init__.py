@@ -1,8 +1,10 @@
 """FedLesScan core: client history, clustering, selection, aggregation."""
 from .aggregation import (ClientUpdate, RunningAggregator, UpdateStore,
                           fedavg_aggregate,
-                          fedavg_coefficients, staleness_aggregate,
-                          staleness_coefficients)
+                          fedavg_coefficients, flat_update_matrix,
+                          staleness_aggregate, staleness_coefficients)
+from .device_batch import (DeviceUpdateBatch, pipeline_enabled,
+                           reset_transfer_stats, transfer_stats)
 from .clustering import (ClusteringResult, calinski_harabasz,
                          calinski_harabasz_batch, cluster_clients, dbscan,
                          pairwise_sq_dists)
@@ -24,4 +26,6 @@ __all__ = [
     "STRATEGIES", "FedAsync", "FedAvg", "FedBuff", "FedLesScan", "FedProx",
     "Strategy", "StrategyConfig", "make_strategy",
     "SERVER_OPTS", "MergePipeline", "ServerOptConfig",
+    "DeviceUpdateBatch", "pipeline_enabled", "transfer_stats",
+    "reset_transfer_stats", "flat_update_matrix",
 ]

@@ -22,9 +22,8 @@ Updates are JAX pytrees.  `aggregate` has two paths:
 from __future__ import annotations
 
 import os
-from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, List, Optional, Sequence
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +37,6 @@ _KERNEL_DEFAULT = os.environ.get("REPRO_AGG_KERNEL", "1") != "0"
 _KERNEL_WARNED = False
 
 
-@dataclass
 class ClientUpdate:
     """One client's local model update as stored in the parameter server.
 
@@ -48,14 +46,64 @@ class ClientUpdate:
     (encoded) / `dense_bytes` (what the plaintext fp32 update would have
     cost).  Both stay None on the uncompressed path so dense runs are
     indistinguishable from pre-compression builds.
+
+    On the device-resident round pipeline (core/device_batch.py) an
+    update is born as a *row reference* into its group's stacked (K, P)
+    matrix: ``batch``/``batch_row`` are set, the concrete pytree is NOT
+    built up front, and ``params`` materializes it lazily on first
+    access (trace digests, the eager parity path, checkpointed in-flight
+    updates).  The merge fast paths read ``flat_params()`` instead and
+    never materialize at all.  Assigning ``params`` detaches the update
+    from its batch — the explicit tree becomes authoritative.
     """
-    client_id: str
-    params: Pytree
-    num_samples: int
-    round_number: int          # t_k — the round the update was trained for
-    training_time: float = 0.0
-    payload_bytes: Optional[int] = None    # encoded wire size (simulated)
-    dense_bytes: Optional[int] = None      # uncompressed fp32 wire size
+
+    __slots__ = ("client_id", "num_samples", "round_number",
+                 "training_time", "payload_bytes", "dense_bytes",
+                 "batch", "batch_row", "_params")
+
+    def __init__(self, client_id: str, params: Pytree = None,
+                 num_samples: int = 0, round_number: int = 0,
+                 training_time: float = 0.0,
+                 payload_bytes: Optional[int] = None,
+                 dense_bytes: Optional[int] = None,
+                 batch=None, batch_row: int = -1):
+        self.client_id = client_id
+        self._params = params
+        self.num_samples = num_samples
+        self.round_number = round_number   # t_k — round the update is for
+        self.training_time = training_time
+        self.payload_bytes = payload_bytes  # encoded wire size (simulated)
+        self.dense_bytes = dense_bytes      # uncompressed fp32 wire size
+        self.batch = batch                  # DeviceUpdateBatch, or None
+        self.batch_row = batch_row
+        if params is None and batch is None:
+            raise ValueError(f"update {client_id!r} needs either concrete "
+                             f"params or a device-batch row reference")
+
+    @property
+    def params(self) -> Pytree:
+        if self._params is None:
+            self._params = self.batch.tree(self.batch_row)
+        return self._params
+
+    @params.setter
+    def params(self, value: Pytree) -> None:
+        self._params = value
+        self.batch = None           # the explicit tree is now authoritative
+        self.batch_row = -1
+
+    def flat_params(self) -> jnp.ndarray:
+        """The flat (P,) ravel_pytree view of this update — a zero-copy
+        row read on the device pipeline, a ravel otherwise."""
+        if self._params is None and self.batch is not None:
+            return self.batch.row(self.batch_row)
+        return ravel_pytree(self.params)[0]
+
+    def __repr__(self) -> str:
+        src = (f"batch_row={self.batch_row}"
+               if self._params is None else "params=<tree>")
+        return (f"ClientUpdate({self.client_id!r}, {src}, "
+                f"n={self.num_samples}, round={self.round_number})")
 
 
 def update_to_record(update: ClientUpdate) -> dict:
@@ -117,23 +165,54 @@ def aggregate_reference(updates: Sequence[ClientUpdate],
     return _weighted_sum(stacked, jnp.asarray(coeffs, dtype=jnp.float32))
 
 
+def flat_update_matrix(updates: Sequence[ClientUpdate]
+                       ) -> Tuple[jnp.ndarray, Any]:
+    """(K, P) stacked flat updates + the shared ``unravel`` handle.
+
+    Zero-copy on the device pipeline: when every update references the
+    same ``DeviceUpdateBatch``, the rows are gathered straight out of
+    the executor's matrix — no per-client unflatten/re-ravel.  Mixed or
+    legacy updates fall back to per-update ``flat_params()`` (itself a
+    row read for batch-backed members, a ravel for concrete ones).  The
+    returned matrix is always a fresh device array, safe to donate to
+    the aggregation kernel.
+    """
+    first = updates[0]
+    b = getattr(first, "batch", None)
+    if (b is not None
+            and all(getattr(u, "batch", None) is b for u in updates)):
+        return (b.gather([u.batch_row for u in updates]), b.unravel)
+    if b is not None:
+        # mixed cohort (e.g. straggler arrivals spanning rounds): stay on
+        # flat rows — the batch already knows the layout, no need to
+        # materialize first's pytree just to recover the unravel handle
+        flat0, unravel = first.flat_params(), b.unravel
+    else:
+        flat0, unravel = ravel_pytree(first.params)
+    rows = [flat0] + [u.flat_params().astype(flat0.dtype)
+                      for u in updates[1:]]
+    return jnp.stack(rows), unravel
+
+
 def _aggregate_flat(updates: Sequence[ClientUpdate],
                     coeffs: np.ndarray, mesh=None) -> Pytree:
-    """Ravel K update pytrees into a (K, P) matrix and run the weighted
+    """Stack K flat updates into a (K, P) matrix (a device-side gather on
+    the zero-copy pipeline, a ravel+stack otherwise) and run the weighted
     sum as one Pallas kernel dispatch, then unravel the result.  With a
     `mesh` of >1 devices the dispatch shards the P dim across it
     (kernels.fed_agg_sharded)."""
     from ..kernels import fed_agg, fed_agg_sharded   # deferred: pallas
 
-    first, unravel = ravel_pytree(updates[0].params)
-    mat = jnp.stack([first] + [ravel_pytree(u.params)[0]
-                               for u in updates[1:]])
+    mat, unravel = flat_update_matrix(updates)
+    out_dtype = mat.dtype
     cf = jnp.asarray(coeffs, dtype=jnp.float32)
     if mesh is not None and int(mesh.size) > 1:
         out = fed_agg_sharded(mat, cf, mesh)
     else:
-        out = fed_agg(mat, cf)
-    return unravel(out.astype(first.dtype))
+        # mat is a fresh stack/gather nobody retains — donate it so XLA
+        # reuses the K·P buffer in place (no-op on CPU)
+        out = fed_agg(mat, cf, donate=True)
+    return unravel(out.astype(out_dtype))
 
 
 def aggregate(updates: Sequence[ClientUpdate], coeffs: np.ndarray,

@@ -83,32 +83,35 @@ class UpdateCompressor:
         # cid -> flat fp32 residual (the coordinates the encoder dropped)
         self._residuals: Dict[str, jnp.ndarray] = {}
         self._unravel32 = None      # cached f32 unravel (model structure)
+        # (global_params tree, its flat f32 view) — the global model is
+        # one object per round, so K clients share one ravel
+        self._flat_g: Optional[Tuple[Pytree, jnp.ndarray]] = None
 
     # ------------------------------------------------------------------
-    def encode(self, client_id: str, params: Pytree, global_params: Pytree
-               ) -> Tuple[Pytree, Optional[int], Optional[int]]:
-        """Compress one client update against the round's global model.
+    def _flat_global(self, global_params: Pytree) -> jnp.ndarray:
+        cached = self._flat_g
+        if cached is not None and cached[0] is global_params:
+            return cached[1]
+        flat_g = ravel_pytree(global_params)[0].astype(jnp.float32)
+        self._flat_g = (global_params, flat_g)
+        return flat_g
 
-        Returns ``(reconstructed_params, payload_bytes, dense_bytes)`` —
-        the reconstruction is the server-side decode W̃ = w + decode(δ̃),
-        i.e. exactly what a real server would hold after receiving the
-        encoded wire payload.  Inactive config → the update passes
-        through untouched with (None, None) byte counts.
-        """
-        if not self.config.active:
-            return params, None, None
+    def _ensure_unravel32(self, global_params: Pytree) -> None:
+        if self._unravel32 is None:
+            _, self._unravel32 = ravel_pytree(
+                jax.tree_util.tree_map(
+                    lambda l: jnp.zeros(jnp.shape(l), jnp.float32),
+                    global_params))
+
+    def _encode_core(self, client_id: str, flat_u32: jnp.ndarray,
+                     flat_g: jnp.ndarray):
+        """Shared EF encode on flat fp32 vectors: returns the decoded
+        delta plus the wire-byte arithmetic, updating the residual."""
         from ..kernels import int8_decode, int8_encode, topk_encode
 
-        flat_u, unravel = ravel_pytree(params)
-        flat_g = ravel_pytree(global_params)[0].astype(jnp.float32)
-        if flat_u.shape != flat_g.shape:
-            raise ValueError(
-                f"update ravels to {flat_u.shape[0]} params, global model "
-                f"to {flat_g.shape[0]} — cannot compress the delta")
-        P = int(flat_u.shape[0])
+        P = int(flat_u32.shape[0])
         dense_bytes = P * _FP32
-
-        delta = flat_u.astype(jnp.float32) - flat_g
+        delta = flat_u32 - flat_g
         residual = self._residuals.get(client_id)
         if self.config.error_feedback and residual is not None:
             inp = delta + residual
@@ -127,13 +130,54 @@ class UpdateCompressor:
 
         if self.config.error_feedback:
             self._residuals[client_id] = inp - decoded
-        if self._unravel32 is None:
-            _, self._unravel32 = ravel_pytree(
-                jax.tree_util.tree_map(
-                    lambda l: jnp.zeros(jnp.shape(l), jnp.float32),
-                    global_params))
+        return decoded, payload_bytes, dense_bytes
+
+    def encode(self, client_id: str, params: Pytree, global_params: Pytree
+               ) -> Tuple[Pytree, Optional[int], Optional[int]]:
+        """Compress one client update against the round's global model.
+
+        Returns ``(reconstructed_params, payload_bytes, dense_bytes)`` —
+        the reconstruction is the server-side decode W̃ = w + decode(δ̃),
+        i.e. exactly what a real server would hold after receiving the
+        encoded wire payload.  Inactive config → the update passes
+        through untouched with (None, None) byte counts.
+        """
+        if not self.config.active:
+            return params, None, None
+        flat_u, unravel = ravel_pytree(params)
+        flat_g = self._flat_global(global_params)
+        if flat_u.shape != flat_g.shape:
+            raise ValueError(
+                f"update ravels to {flat_u.shape[0]} params, global model "
+                f"to {flat_g.shape[0]} — cannot compress the delta")
+        decoded, payload_bytes, dense_bytes = self._encode_core(
+            client_id, flat_u.astype(jnp.float32), flat_g)
+        self._ensure_unravel32(global_params)
         recon = unravel((flat_g + decoded).astype(flat_u.dtype))
         return recon, payload_bytes, dense_bytes
+
+    def encode_flat(self, client_id: str, flat_u: jnp.ndarray,
+                    global_params: Pytree
+                    ) -> Tuple[jnp.ndarray, Optional[int], Optional[int]]:
+        """``encode`` for one row of a ``DeviceUpdateBatch`` — the update
+        never leaves its flat layout (no per-client unflatten/re-ravel).
+
+        Returns ``(reconstructed_flat_row, payload_bytes, dense_bytes)``;
+        the row is bitwise the ravel of what ``encode`` would return,
+        since ``ravel(unravel(x)) == x`` in the promoted flat dtype.
+        """
+        if not self.config.active:
+            return flat_u, None, None
+        flat_g = self._flat_global(global_params)
+        if flat_u.shape != flat_g.shape:
+            raise ValueError(
+                f"update row has {flat_u.shape[0]} params, global model "
+                f"ravels to {flat_g.shape[0]} — cannot compress the delta")
+        decoded, payload_bytes, dense_bytes = self._encode_core(
+            client_id, flat_u.astype(jnp.float32), flat_g)
+        self._ensure_unravel32(global_params)
+        return ((flat_g + decoded).astype(flat_u.dtype),
+                payload_bytes, dense_bytes)
 
     # ---- checkpoint surface (fl/checkpointing.py) --------------------
     def state_dict(self, arrays: Optional[dict] = None) -> dict:

@@ -49,7 +49,8 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from ..optim.optimizers import global_norm, zeros_like_f32
-from .aggregation import ClientUpdate, aggregate, aggregate_reference
+from .aggregation import (ClientUpdate, aggregate, aggregate_reference,
+                          flat_update_matrix)
 
 Pytree = Any
 
@@ -183,7 +184,9 @@ class MergePipeline:
         from ..kernels import fed_agg_apply, fed_agg_apply_sharded
 
         flat_g, unravel = ravel_pytree(global_params)
-        mat = jnp.stack([ravel_pytree(u.params)[0] for u in updates])
+        # zero-copy on the device pipeline: batch-backed updates gather
+        # rows straight out of the executor's (K, P) matrix
+        mat, _ = flat_update_matrix(updates)
         if mat.shape[1] != flat_g.shape[0]:
             # a genuine layout error, not an exotic-pytree condition —
             # RuntimeError so the fallback handler doesn't mislabel it
@@ -191,9 +194,12 @@ class MergePipeline:
                 f"update/global size mismatch: updates ravel to "
                 f"{mat.shape[1]} parameters, global model to "
                 f"{flat_g.shape[0]}")
-        zero = jnp.zeros_like(flat_g, dtype=jnp.float32)
-        flat_m = (ravel_pytree(self._m)[0] if self._m is not None else zero)
-        flat_v = (ravel_pytree(self._v)[0] if self._v is not None else zero)
+        # distinct fresh zero buffers — m and v are donated separately,
+        # so they must never share storage
+        flat_m = (ravel_pytree(self._m)[0] if self._m is not None
+                  else jnp.zeros_like(flat_g, dtype=jnp.float32))
+        flat_v = (ravel_pytree(self._v)[0] if self._v is not None
+                  else jnp.zeros_like(flat_g, dtype=jnp.float32))
         lr, b1, b2, eps = self._kernel_scalars()
         if self.mesh is not None and int(self.mesh.size) > 1:
             out, m_new, v_new, norm = fed_agg_apply_sharded(
@@ -201,9 +207,13 @@ class MergePipeline:
                 flat_m, flat_v, lr, mix, b1, b2, eps,
                 opt=self.config.name, mesh=self.mesh)
         else:
+            # donate the merge matrix and the flat moment buffers (all
+            # rebuilt fresh next round) — NEVER flat_g: the caller's
+            # strategy retains global_params across the merge
             out, m_new, v_new, norm = fed_agg_apply(
                 mat, jnp.asarray(coeffs, dtype=jnp.float32), flat_g,
-                flat_m, flat_v, lr, mix, b1, b2, eps, opt=self.config.name)
+                flat_m, flat_v, lr, mix, b1, b2, eps,
+                opt=self.config.name, donate=True)
         # moments unravel through an f32 view of the params structure:
         # the params-derived `unravel` would round-trip every leaf via
         # the param dtype, silently quantizing fp32 moment state for

@@ -441,6 +441,10 @@ class InvocationEngine:
             for cid, (update, nominal_s) in st.work.items():
                 entry = {"nominal_s": nominal_s, "update": None}
                 if update is not None:
+                    # .params is the device-pipeline lazy-materialization
+                    # point: a batch-backed update (DeviceUpdateBatch row)
+                    # builds its concrete pytree here, exactly when the
+                    # in-flight snapshot genuinely needs tree structure
                     arrays[f"engine/{rnd}/work/{cid}"] = update.params
                     entry["update"] = update_to_record(update)
                 work[cid] = entry

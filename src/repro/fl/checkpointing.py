@@ -60,6 +60,15 @@ def _flat_entries(prefix: str, tree: Pytree) -> Dict[str, np.ndarray]:
     return {f"{prefix}{_SEP}{k}": v for k, v in flat.items()}
 
 
+def _flat_entries_raw(prefix: str, tree: Pytree) -> Dict[str, Any]:
+    """Like `_flat_entries` but leaves stay device-resident — the caller
+    fetches the whole snapshot with one batched `jax.device_get` instead
+    of one blocking per-leaf transfer."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {f"{prefix}{_SEP}" + _SEP.join(_path_str(p) for p in kp): leaf
+            for kp, leaf in flat}
+
+
 def _unflatten_like(data, prefix: str, like: Pytree,
                     force_dtype=None) -> Pytree:
     """Rebuild a pytree with `like`'s structure from `prefix|<path>` npz
@@ -157,9 +166,13 @@ class RoundCheckpointer:
         state["pair"] = pair
         state["array_keys"] = sorted(arrays)
 
-        entries = _flat_entries("params", params)
+        entries = _flat_entries_raw("params", params)
         for key, tree in arrays.items():
-            entries.update(_flat_entries(f"extra{_SEP}{key}", tree))
+            entries.update(_flat_entries_raw(f"extra{_SEP}{key}", tree))
+        # one batched host fetch for the whole snapshot — params, server
+        # moments, and every cached in-flight update sync together
+        fetched = jax.device_get(list(entries.values()))
+        entries = {k: np.asarray(v) for k, v in zip(entries, fetched)}
         entries[_META_KEY] = np.array(json.dumps(pair, sort_keys=True))
         _atomic_write_npz(self._params_path(next_round), entries)
         _atomic_write_text(self._state_path(next_round), json.dumps(state))

@@ -68,13 +68,32 @@ class ClientPool:
 
     # ------------------------------------------------------------------
     def package_update(self, cid: str, params: Pytree,
-                       round_number: int,
-                       global_params: Pytree) -> ClientUpdate:
+                       round_number: int, global_params: Pytree,
+                       batch=None, row: int = -1) -> ClientUpdate:
         """Wrap trained params into the wire-format ClientUpdate: with a
         compressor the params become the server-side decode and the
         simulated payload/dense byte counts ride along; without one the
-        update is the plain dense pytree (byte-identical legacy path)."""
+        update is the plain dense pytree (byte-identical legacy path).
+
+        Device-pipeline variant: pass ``batch``/``row`` (a
+        ``DeviceUpdateBatch`` from the vectorized executor) instead of
+        ``params`` — compression then reads/writes the flat row in place
+        (``encode_flat``) and the returned ClientUpdate is a thin view
+        whose ``.params`` materializes lazily on first access."""
         payload_bytes = dense_bytes = None
+        if batch is not None:
+            if self.compressor is not None:
+                new_row, payload_bytes, dense_bytes = \
+                    self.compressor.encode_flat(cid, batch.row(row),
+                                                global_params)
+                if payload_bytes is not None:
+                    batch.set_row(row, new_row)
+            return ClientUpdate(
+                client_id=cid,
+                num_samples=len(self.clients[cid].dataset),
+                round_number=round_number,
+                payload_bytes=payload_bytes, dense_bytes=dense_bytes,
+                batch=batch, batch_row=row)
         if self.compressor is not None:
             params, payload_bytes, dense_bytes = self.compressor.encode(
                 cid, params, global_params)
@@ -97,10 +116,10 @@ class ClientPool:
         return update, self.task.nominal_work_seconds(state.dataset)
 
     # ------------------------------------------------------------------
-    def batch_work_fn(self, cids, global_params: Pytree,
-                      round_number: int) -> Dict[str, tuple]:
-        """Vectorized Client_Update: same contract as `work_fn` but for a
-        whole round's cohort in one vmapped dispatch (fl/executor.py)."""
+    @property
+    def executor(self):
+        """The shared VectorizedExecutor (created on first use; the
+        controller's warm-up pass reaches it through here)."""
         if self._executor is None:
             from .executor import VectorizedExecutor
             # cache on the task: its jit cache then survives across pools
@@ -109,5 +128,11 @@ class ClientPool:
             if self._executor is None:
                 self._executor = VectorizedExecutor(self.task)
                 self.task._vec_executor = self._executor
-        return self._executor.run_clients(self, cids, global_params,
-                                          round_number)
+        return self._executor
+
+    def batch_work_fn(self, cids, global_params: Pytree,
+                      round_number: int) -> Dict[str, tuple]:
+        """Vectorized Client_Update: same contract as `work_fn` but for a
+        whole round's cohort in one vmapped dispatch (fl/executor.py)."""
+        return self.executor.run_clients(self, cids, global_params,
+                                         round_number)

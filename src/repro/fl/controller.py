@@ -303,6 +303,22 @@ class TrainingDriver:
             return None
         return self.pool.batch_work_fn(alive, global_params, round_number)
 
+    def warmup_executor(self, global_params: Pytree) -> int:
+        """Opt-in compile warm-up (ExperimentConfig.executor_warmup):
+        dispatch the vectorized executor once for the cohort-bucket
+        shapes round 0 would use, so XLA compilation happens before the
+        timed loop.  Touches no round state — no packaging, no
+        compressor residuals, no history.  Returns the executor's
+        cumulative compile count (0 when not vectorized)."""
+        if not (self.vectorized and hasattr(self.pool, "batch_work_fn")
+                and hasattr(self.pool, "executor")):
+            return 0
+        want = self.strategy.config.clients_per_round
+        cids = list(self.pool.client_ids)[:want]
+        if not cids:
+            return 0
+        return self.pool.executor.warmup(self.pool, cids, global_params)
+
     def _handle_straggler(self, completion: ClientCompletion,
                           arrival_time: float, current_round: int) -> float:
         """A client from an earlier round finished mid-flight: record its

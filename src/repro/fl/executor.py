@@ -22,16 +22,27 @@ through one ``jax.vmap``-of-``lax.scan`` dispatch:
 The controller feeds the resulting updates to the event engine as the
 round's precomputed work cache; the per-client `ClientPool.work_fn` path
 remains for incremental invocation and as the parity reference.
+
+With the device pipeline enabled (``REPRO_DEVICE_PIPELINE``, default on)
+the trained stack never leaves the device: `run_group_batch` flattens it
+into the ``(K, P)`` ravel-layout matrix with one extra jitted dispatch
+and hands downstream consumers a `core.device_batch.DeviceUpdateBatch` —
+per-client pytrees and host loss scalars are materialized lazily.  The
+flatten is a *separate* dispatch from the training jit on purpose: XLA
+never gets the chance to rearrange training math around it, so enabling
+the pipeline cannot perturb training numerics.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.flatten_util import ravel_pytree
 
+from ..core.device_batch import DeviceUpdateBatch, pipeline_enabled
 from ..optim import apply_updates, proximal_grad
 
 Pytree = Any
@@ -42,21 +53,24 @@ def _batch_indices(n: int, batch_size: int, epochs: int,
     """(T, B) index + mask matrices reproducing `loader.batches` order.
 
     Trailing partial batches are padded with index 0 / mask 0.
+
+    Vectorized: one ``rng.permuted`` over a tiled arange draws all E
+    epoch permutations at once — bit-identical, draw-for-draw, to E
+    sequential ``rng.permutation(n)`` calls (both reduce to E row-wise
+    Fisher–Yates passes over the same bit stream), without the
+    O(E·n/B) per-batch Python loop.
     """
-    idx_rows: List[np.ndarray] = []
-    mask_rows: List[np.ndarray] = []
-    for _ in range(epochs):
-        order = rng.permutation(n)
-        for i in range(0, n, batch_size):
-            chunk = order[i:i + batch_size]
-            pad = batch_size - len(chunk)
-            mask = np.ones(batch_size, dtype=np.float32)
-            if pad:
-                chunk = np.concatenate([chunk, np.zeros(pad, dtype=chunk.dtype)])
-                mask[batch_size - pad:] = 0.0
-            idx_rows.append(chunk)
-            mask_rows.append(mask)
-    return np.stack(idx_rows), np.stack(mask_rows)
+    orders = rng.permuted(np.tile(np.arange(n), (epochs, 1)), axis=1)
+    per_epoch = -(-n // batch_size)             # batches per epoch
+    pad = per_epoch * batch_size - n
+    if pad:
+        orders = np.concatenate(
+            [orders, np.zeros((epochs, pad), dtype=orders.dtype)], axis=1)
+    idx = orders.reshape(epochs * per_epoch, batch_size)
+    mask = np.ones((epochs, per_epoch * batch_size), dtype=np.float32)
+    if pad:
+        mask[:, n:] = 0.0
+    return idx, mask.reshape(epochs * per_epoch, batch_size)
 
 
 def _bucket(k: int) -> int:
@@ -70,6 +84,16 @@ class VectorizedExecutor:
     def __init__(self, task):
         self.task = task
         self._jit_cache: Dict[float, Any] = {}   # mu -> compiled group fn
+        # stacked-tree → (K, P) ravel-layout flatten; its own dispatch so
+        # the training jit's numerics are untouched by the pipeline
+        self._flatten = jax.jit(self._flatten_stacked)
+        self._unravel_cache: Dict[Any, Callable] = {}
+        # recompile accounting: one entry per distinct dispatch signature
+        # (mu + bucketed operand shapes).  compile_count going flat across
+        # rounds is the "compilation is a non-event" invariant the round-
+        # pipeline tests assert.
+        self._dispatch_keys: set = set()
+        self.compile_count = 0
 
     # ------------------------------------------------------------------
     def _group_fn(self, mu: float):
@@ -111,10 +135,35 @@ class VectorizedExecutor:
         return fn
 
     # ------------------------------------------------------------------
-    def run_group(self, cids: Sequence[str], datasets, global_params: Pytree,
-                  mu: float, seeds: Sequence[int]
-                  ) -> Dict[str, Tuple[Pytree, float]]:
-        """Train one same-shape group; returns cid -> (params, mean loss)."""
+    @staticmethod
+    def _flatten_stacked(stacked: Pytree) -> jnp.ndarray:
+        """(K, P) matrix whose row k is exactly
+        ``ravel_pytree(tree_map(lambda l: l[k], stacked))[0]``: raveled
+        leaves concatenated in tree order, cast to the promoted dtype."""
+        leaves = jax.tree_util.tree_leaves(stacked)
+        k = leaves[0].shape[0]
+        dt = jnp.result_type(*[l.dtype for l in leaves])
+        return jnp.concatenate(
+            [l.reshape(k, -1).astype(dt) for l in leaves], axis=1)
+
+    def _unravel_for(self, stacked: Pytree) -> Callable:
+        """The shared row → pytree inverse (cached per tree structure)."""
+        leaves, treedef = jax.tree_util.tree_flatten(stacked)
+        key = (treedef,
+               tuple((l.shape[1:], str(l.dtype)) for l in leaves))
+        un = self._unravel_cache.get(key)
+        if un is None:
+            single = jax.tree_util.tree_unflatten(
+                treedef, [jnp.zeros(l.shape[1:], l.dtype) for l in leaves])
+            _, un = ravel_pytree(single)
+            self._unravel_cache[key] = un
+        return un
+
+    def _train_group(self, cids: Sequence[str], datasets,
+                     global_params: Pytree, mu: float,
+                     seeds: Sequence[int]) -> Tuple[Pytree, jnp.ndarray]:
+        """One bucketed vmap dispatch: (stacked out_params, losses) with
+        K padded to the power-of-two bucket (rows ≥ len(cids) are pads)."""
         cfg = self.task.config
         xs, ys, ms = [], [], []
         for cid, ds, seed in zip(cids, datasets, seeds):
@@ -130,29 +179,91 @@ class VectorizedExecutor:
             xs = np.concatenate([xs, np.repeat(xs[-1:], pad, axis=0)])
             ys = np.concatenate([ys, np.repeat(ys[-1:], pad, axis=0)])
             ms = np.concatenate([ms, np.repeat(ms[-1:], pad, axis=0)])
-        out_params, losses = self._group_fn(mu)(
+        key = (mu, xs.shape, str(xs.dtype), ys.shape, str(ys.dtype))
+        if key not in self._dispatch_keys:
+            self._dispatch_keys.add(key)
+            self.compile_count += 1
+        return self._group_fn(mu)(
             global_params, jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(ms))
+
+    def run_group(self, cids: Sequence[str], datasets, global_params: Pytree,
+                  mu: float, seeds: Sequence[int]
+                  ) -> Dict[str, Tuple[Pytree, float]]:
+        """Train one same-shape group; returns cid -> (params, mean loss)."""
+        out_params, losses = self._train_group(cids, datasets, global_params,
+                                               mu, seeds)
+        # one batched transfer for the whole loss vector — K per-scalar
+        # float(losses[k]) syncs were K blocking round-trips
+        losses_np = np.asarray(losses)
         results = {}
         for k, cid in enumerate(cids):
             params_k = jax.tree_util.tree_map(lambda l: l[k], out_params)
-            results[cid] = (params_k, float(losses[k]))
+            results[cid] = (params_k, float(losses_np[k]))
         return results
 
+    def run_group_batch(self, cids: Sequence[str], datasets,
+                        global_params: Pytree, mu: float,
+                        seeds: Sequence[int]) -> DeviceUpdateBatch:
+        """Device-pipeline twin of `run_group`: the trained stack is
+        flattened on device into the (K_bucket, P) ravel-layout matrix
+        and returned as a DeviceUpdateBatch — nothing crosses to the
+        host until a consumer materializes a row."""
+        out_params, losses = self._train_group(cids, datasets, global_params,
+                                               mu, seeds)
+        return DeviceUpdateBatch(self._flatten(out_params), cids,
+                                 self._unravel_for(out_params),
+                                 losses=losses)
+
     # ------------------------------------------------------------------
-    def run_clients(self, pool, cids: Sequence[str], global_params: Pytree,
-                    round_number: int) -> Dict[str, tuple]:
-        """Group → train → package: cid -> (ClientUpdate, nominal_work_s),
-        the same contract as `ClientPool.work_fn` per client."""
+    def _group(self, pool, cids: Sequence[str]) -> Dict[tuple, List[str]]:
+        """Bucket clients by (dataset size, sample shape, dtype)."""
         groups: Dict[tuple, List[str]] = {}
         for cid in cids:
             ds = pool.clients[cid].dataset
             key = (len(ds), ds.x.shape[1:], str(ds.x.dtype))
             groups.setdefault(key, []).append(cid)
+        return groups
 
-        results: Dict[str, tuple] = {}
-        for group_cids in groups.values():
+    def warmup(self, pool, cids: Sequence[str], global_params: Pytree,
+               round_number: int = 0) -> int:
+        """Compile the train (and flatten) dispatches for the bucket
+        shapes `cids` would use, without touching any round state — no
+        packaging, no compressor residuals, results discarded.  Returns
+        the executor's cumulative compile count."""
+        for group_cids in self._group(pool, cids).values():
             datasets = [pool.clients[c].dataset for c in group_cids]
             seeds = [pool.client_seed(c, round_number) for c in group_cids]
+            out_params, _losses = self._train_group(
+                group_cids, datasets, global_params, pool.proximal_mu, seeds)
+            if pipeline_enabled():
+                self._flatten(out_params).block_until_ready()
+        return self.compile_count
+
+    def run_clients(self, pool, cids: Sequence[str], global_params: Pytree,
+                    round_number: int) -> Dict[str, tuple]:
+        """Group → train → package: cid -> (ClientUpdate, nominal_work_s),
+        the same contract as `ClientPool.work_fn` per client.
+
+        Pipeline on: each group's updates stay on device as one
+        DeviceUpdateBatch and the packaged ClientUpdates are thin row
+        views.  Pipeline off (``REPRO_DEVICE_PIPELINE=0``): the legacy
+        per-client materialize → package path."""
+        results: Dict[str, tuple] = {}
+        for group_cids in self._group(pool, cids).values():
+            datasets = [pool.clients[c].dataset for c in group_cids]
+            seeds = [pool.client_seed(c, round_number) for c in group_cids]
+            if pipeline_enabled():
+                batch = self.run_group_batch(group_cids, datasets,
+                                             global_params,
+                                             pool.proximal_mu, seeds)
+                for i, cid in enumerate(group_cids):
+                    ds = pool.clients[cid].dataset
+                    update = pool.package_update(cid, None, round_number,
+                                                 global_params,
+                                                 batch=batch, row=i)
+                    results[cid] = (update,
+                                    self.task.nominal_work_seconds(ds))
+                continue
             trained = self.run_group(group_cids, datasets, global_params,
                                      pool.proximal_mu, seeds)
             for cid in group_cids:

@@ -110,6 +110,14 @@ class ExperimentConfig:
     # over this many host devices (0/1 → single-device; >1 requires
     # XLA_FLAGS=--xla_force_host_platform_device_count≥N or real devices)
     merge_devices: int = 0
+    # round-pipeline compilation surface (launch/compile_cache.py):
+    # a directory enables JAX's persistent compilation cache, so repeat
+    # runs (and CI) skip XLA compiles entirely; executor_warmup runs one
+    # throwaway vectorized dispatch before round 0 so compilation never
+    # lands inside the timed loop (off by default — warm-up itself costs
+    # one cohort's training compute)
+    compilation_cache_dir: Optional[str] = None
+    executor_warmup: bool = False
 
 
 def make_straggler_profiles(client_ids, scenario: ScenarioConfig
@@ -140,6 +148,9 @@ def run_experiment(task: ClassificationTask,
                    initial_params=None,
                    verbose: bool = False) -> ExperimentResult:
     """Wire up platform → invoker → controller and run one experiment."""
+    if config.compilation_cache_dir:
+        from ..launch.compile_cache import enable_compilation_cache
+        enable_compilation_cache(config.compilation_cache_dir)
     history = ClientHistoryDB()
     history.ensure(train_partitions.keys())
 
@@ -227,6 +238,8 @@ def run_experiment(task: ClassificationTask,
             keep_best=config.checkpoint_keep_best,
             best_metric=config.checkpoint_best_metric)
 
+    if config.executor_warmup:
+        controller.warmup_executor(params)
     _, result = controller.run(params, config.n_rounds, verbose=verbose,
                                start_round=start_round,
                                checkpointer=checkpointer,

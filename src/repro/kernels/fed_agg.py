@@ -46,9 +46,9 @@ def _fed_agg_kernel(coeff_ref, upd_ref, out_ref):
                            keepdims=True).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_p", "interpret"))
-def fed_agg(updates: jnp.ndarray, coeffs: jnp.ndarray,
-            tile_p: int = 2048, interpret: bool = True) -> jnp.ndarray:
+def _fed_agg_impl(updates: jnp.ndarray, coeffs: jnp.ndarray,
+                  tile_p: int = 2048,
+                  interpret: bool = True) -> jnp.ndarray:
     """updates: (K, P); coeffs: (K,) → (P,).
 
     P is padded to a tile multiple; each grid step owns one P tile with
@@ -75,6 +75,36 @@ def fed_agg(updates: jnp.ndarray, coeffs: jnp.ndarray,
         interpret=interpret,
     )(coeffs2, updates)
     return out[0, :P]
+
+
+# jit twins: same trace, the donated one hands the (K, P) update matrix's
+# buffer back to XLA for in-place reuse.  Donation picks the variant at
+# the *python* level so the static signature (and the compiled cache key)
+# stays identical whether the caller donates or not.
+_fed_agg_jit = jax.jit(_fed_agg_impl,
+                       static_argnames=("tile_p", "interpret"))
+_fed_agg_donated = jax.jit(_fed_agg_impl,
+                           static_argnames=("tile_p", "interpret"),
+                           donate_argnums=(0,))
+
+
+def _can_donate() -> bool:
+    """CPU XLA ignores donation (and warns per dispatch) — only offer
+    buffers on accelerator backends."""
+    return jax.default_backend() != "cpu"
+
+
+def fed_agg(updates: jnp.ndarray, coeffs: jnp.ndarray,
+            tile_p: int = 2048, interpret: bool = True,
+            donate: bool = False) -> jnp.ndarray:
+    """Weighted sum of K stacked updates; see ``_fed_agg_impl``.
+
+    ``donate=True`` promises ``updates`` is a fresh temporary (e.g. the
+    merge matrix gathered from a ``DeviceUpdateBatch``) that the caller
+    never touches again, letting XLA recycle the K·P buffer in place.
+    """
+    fn = _fed_agg_donated if (donate and _can_donate()) else _fed_agg_jit
+    return fn(updates, coeffs, tile_p=tile_p, interpret=interpret)
 
 
 def _make_apply_kernel(opt: str):
@@ -127,12 +157,11 @@ def _make_apply_kernel(opt: str):
     return kernel
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("opt", "tile_p", "interpret"))
-def fed_agg_apply(updates: jnp.ndarray, coeffs: jnp.ndarray,
-                  params: jnp.ndarray, m: jnp.ndarray, v: jnp.ndarray,
-                  lr, mix, b1, b2, eps, *, opt: str = "fedadam",
-                  tile_p: int = 2048, interpret: bool = True):
+def _fed_agg_apply_impl(updates: jnp.ndarray, coeffs: jnp.ndarray,
+                        params: jnp.ndarray, m: jnp.ndarray,
+                        v: jnp.ndarray, lr, mix, b1, b2, eps, *,
+                        opt: str = "fedadam", tile_p: int = 2048,
+                        interpret: bool = True):
     """Fused server-update step on the flattened model.
 
     updates: (K, P); coeffs: (K,); params/m/v: (P,) fp32 moment buffers.
@@ -175,6 +204,36 @@ def fed_agg_apply(updates: jnp.ndarray, coeffs: jnp.ndarray,
     )(scal, coeffs2, updates, g2, m2, v2)
     norm = jnp.sqrt(jnp.sum(sq))
     return out[0, :P], m_new[0, :P], v_new[0, :P], norm
+
+
+# donation twin: hand back the update matrix (0) and the moment buffers
+# m/v (3, 4) — but NEVER params (2): strategies retain global_params, and
+# on single-leaf models the raveled view can alias the live tree's leaf.
+_fed_agg_apply_jit = jax.jit(
+    _fed_agg_apply_impl,
+    static_argnames=("opt", "tile_p", "interpret"))
+_fed_agg_apply_donated = jax.jit(
+    _fed_agg_apply_impl,
+    static_argnames=("opt", "tile_p", "interpret"),
+    donate_argnums=(0, 3, 4))
+
+
+def fed_agg_apply(updates: jnp.ndarray, coeffs: jnp.ndarray,
+                  params: jnp.ndarray, m: jnp.ndarray, v: jnp.ndarray,
+                  lr, mix, b1, b2, eps, *, opt: str = "fedadam",
+                  tile_p: int = 2048, interpret: bool = True,
+                  donate: bool = False):
+    """Fused server merge; see ``_fed_agg_apply_impl``.
+
+    ``donate=True`` recycles the update matrix and the flat m/v moment
+    buffers in place (the merge pipeline rebuilds fresh flats for the
+    next round from its pytree state, so the old ones are dead after the
+    dispatch).  ``params`` is never donated.
+    """
+    fn = (_fed_agg_apply_donated if (donate and _can_donate())
+          else _fed_agg_apply_jit)
+    return fn(updates, coeffs, params, m, v, lr, mix, b1, b2, eps,
+              opt=opt, tile_p=tile_p, interpret=interpret)
 
 
 # ------------------------------------------------------------ sharded

@@ -31,19 +31,23 @@ INTERPRET = (jax.default_backend() == "cpu" if _ENV is None
 
 def fed_agg(updates: jnp.ndarray, coeffs: jnp.ndarray,
             tile_p: int = 2048,
-            interpret: Optional[bool] = None) -> jnp.ndarray:
+            interpret: Optional[bool] = None,
+            donate: bool = False) -> jnp.ndarray:
     return _fed_agg(updates, coeffs, tile_p=tile_p,
-                    interpret=INTERPRET if interpret is None else interpret)
+                    interpret=INTERPRET if interpret is None else interpret,
+                    donate=donate)
 
 
 def fed_agg_apply(updates: jnp.ndarray, coeffs: jnp.ndarray,
                   params: jnp.ndarray, m: jnp.ndarray, v: jnp.ndarray,
                   lr, mix, b1, b2, eps, *, opt: str = "fedadam",
-                  tile_p: int = 2048, interpret: Optional[bool] = None):
+                  tile_p: int = 2048, interpret: Optional[bool] = None,
+                  donate: bool = False):
     return _fed_agg_apply(
         updates, coeffs, params, m, v, lr, mix, b1, b2, eps, opt=opt,
         tile_p=tile_p,
-        interpret=INTERPRET if interpret is None else interpret)
+        interpret=INTERPRET if interpret is None else interpret,
+        donate=donate)
 
 
 def fed_agg_sharded(updates: jnp.ndarray, coeffs: jnp.ndarray, mesh,
