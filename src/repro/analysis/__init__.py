@@ -1,0 +1,32 @@
+"""repro-lint: determinism & device-safety static analysis.
+
+The reproduction's headline claims (EUR/cost/time comparisons, donation
+safety, recompile-free rounds, kernel↔oracle parity) all rest on
+invariants that golden-trace tests can only check after the fact, and
+only along the paths their inputs happen to exercise.  This package
+checks the same invariants *statically*, at review time, across every
+source file:
+
+  determinism   unseeded RNG calls, wall-clock/uuid reads in simulation
+                paths, builtin ``hash()`` in seed derivation, raw set
+                iteration feeding order-sensitive accumulation
+  jax-safety    host syncs inside ``jit``-ed functions, use-after-donate
+                on buffers handed to the ``donate_argnums`` twins,
+                ``jax.jit`` construction inside per-round call paths,
+                ``REPRO_*`` env reads outside ``analysis/gates.py``
+  contract      every Pallas kernel entry point needs a matching oracle
+                in ``kernels/ref.py`` plus a test referencing both;
+                ``TraceRecorder`` record key-sets must match the schema
+                declared in ``faas/trace.py`` (golden tests key on them)
+
+Run it with ``python -m repro.analysis`` (see ``__main__.py`` for the
+CLI).  Suppress a single line with ``# repro-lint: disable=RULE``;
+grandfather pre-existing findings via the committed ``baseline.json``.
+
+This ``__init__`` stays import-light on purpose: simulation modules
+import :mod:`repro.analysis.gates` (the env-gate registry) at module
+load, and must not drag the lint engine in with it.
+"""
+from __future__ import annotations
+
+__all__ = ["gates"]

@@ -1,0 +1,39 @@
+"""Rule registry: every shipped repro-lint rule, by family.
+
+Adding a rule = subclass :class:`repro.analysis.core.Rule` in the
+matching family module, instantiate it in that module's ``RULES`` tuple,
+and add a known-bad fixture under ``tests/analysis_fixtures/`` (the
+meta-test asserts every registered rule fires on the corpus).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from ..core import Rule
+from .contracts import RULES as CONTRACT_RULES
+from .determinism import RULES as DETERMINISM_RULES
+from .jax_safety import RULES as JAX_SAFETY_RULES
+
+ALL_RULES: Sequence[Rule] = (
+    DETERMINISM_RULES + JAX_SAFETY_RULES + CONTRACT_RULES)
+
+_BY_KEY: Dict[str, Rule] = {}
+for _r in ALL_RULES:
+    _BY_KEY[_r.id.lower()] = _r
+    _BY_KEY[_r.name.lower()] = _r
+
+
+def select_rules(spec: Optional[Sequence[str]] = None) -> List[Rule]:
+    """Resolve ``--rules`` ids/slugs (None = everything)."""
+    if not spec:
+        return list(ALL_RULES)
+    picked: List[Rule] = []
+    for key in spec:
+        rule = _BY_KEY.get(key.strip().lower())
+        if rule is None:
+            raise KeyError(
+                f"unknown rule {key!r}; available: "
+                + ", ".join(sorted({r.id for r in ALL_RULES})))
+        if rule not in picked:
+            picked.append(rule)
+    return picked

@@ -1,0 +1,256 @@
+"""Contract rules: cross-file invariants the golden suites key on.
+
+CON001 — every Pallas kernel entry point exported from
+``kernels/__init__.py`` must have a pure-jnp oracle in ``kernels/ref.py``
+and at least one test exercising both names (the allclose parity
+surface; PRs 5/7 live and die by it).
+
+CON002 — the dict literals each ``TraceRecorder`` sink emits must match
+the key-set declared in ``RECORD_SCHEMAS`` (``faas/trace.py``): golden
+trace tests compare *bytes*, so an undeclared key silently added to a
+record invalidates every committed golden at once.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..core import (FileContext, Finding, Project, Rule,
+                    walk_scope)
+
+KERNELS_INIT = "kernels/__init__.py"
+KERNELS_REF = "kernels/ref.py"
+TRACE_MODULE = "faas/trace.py"
+
+# __all__ entries that are not kernel entry points: constants
+# (ALL_CAPS) and the oracle module itself
+_NON_KERNEL_EXPORTS = {"ref"}
+
+
+def _all_entries(tree: ast.Module) -> List[Tuple[str, int]]:
+    """(name, lineno) for each string in the module's ``__all__``."""
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "__all__"
+                and isinstance(node.value, (ast.List, ast.Tuple))):
+            return [(e.value, e.lineno) for e in node.value.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)]
+    return []
+
+
+class KernelOracleRule(Rule):
+    """CON001: kernel entry points need an oracle and a parity test."""
+
+    id = "CON001"
+    name = "kernel-oracle-parity"
+    description = ("every exported kernel needs a kernels/ref.py oracle "
+                   "plus a test referencing both")
+
+    def _oracle_for(self, kernel: str,
+                    refs: Set[str]) -> Optional[str]:
+        """Best oracle for ``kernel``: exact ``<base>_ref`` first, then
+        the longest ``<prefix>_ref`` whose prefix the kernel name starts
+        with (``topk_mask`` → ``topk_ref``, ``ssd_scan`` → ``ssd_ref``);
+        ``_sharded`` variants parity-check against the unsharded oracle.
+        """
+        base = kernel[:-len("_sharded")] if kernel.endswith("_sharded") \
+            else kernel
+        if f"{base}_ref" in refs:
+            return f"{base}_ref"
+        best = None
+        for r in refs:
+            prefix = r[:-len("_ref")]
+            if base.startswith(prefix):
+                if best is None or len(prefix) > len(best) - len("_ref"):
+                    best = r
+        return best
+
+    def check_project(self, project: Project) -> Iterator[Finding]:
+        init_ctx = project.get(KERNELS_INIT)
+        if init_ctx is None or init_ctx.tree is None:
+            return
+        entries = [(n, ln) for n, ln in _all_entries(init_ctx.tree)
+                   if n not in _NON_KERNEL_EXPORTS and not n.isupper()]
+        refs: Set[str] = set()
+        ref_ctx = project.get(KERNELS_REF)
+        if ref_ctx is not None and ref_ctx.tree is not None:
+            refs = {n.name for n in ref_ctx.tree.body
+                    if isinstance(n, ast.FunctionDef)
+                    and n.name.endswith("_ref")}
+        tests = project.test_sources()
+        for kernel, lineno in entries:
+            oracle = self._oracle_for(kernel, refs)
+            if oracle is None:
+                yield self.finding(
+                    KERNELS_INIT, lineno,
+                    f"kernel `{kernel}` has no oracle in kernels/ref.py "
+                    f"(expected `{kernel}_ref` or a shared-prefix "
+                    f"oracle)")
+                continue
+            if tests and not any(kernel in src and oracle in src
+                                 for src in tests):
+                yield self.finding(
+                    KERNELS_INIT, lineno,
+                    f"no test references both `{kernel}` and its oracle "
+                    f"`{oracle}` — the parity surface is unguarded")
+
+
+def _module_str_consts(tree: ast.Module) -> Dict[str, str]:
+    consts: Dict[str, str] = {}
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, str)):
+            consts[node.targets[0].id] = node.value.value
+    return consts
+
+
+def _resolve_key(node: ast.AST,
+                 consts: Dict[str, str]) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.Name):
+        return consts.get(node.id)
+    return None
+
+
+def _parse_schemas(tree: ast.Module, consts: Dict[str, str]
+                   ) -> Optional[Dict[str, dict]]:
+    """The ``RECORD_SCHEMAS`` dict literal, with REC_* names resolved."""
+    for node in tree.body:
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "RECORD_SCHEMAS"
+                and isinstance(node.value, ast.Dict)):
+            continue
+        schemas: Dict[str, dict] = {}
+        for key_node, val_node in zip(node.value.keys,
+                                      node.value.values):
+            rec_type = _resolve_key(key_node, consts)
+            if rec_type is None or not isinstance(val_node, ast.Dict):
+                continue
+            spec = {"required": set(), "optional": set(), "open": False}
+            for k, v in zip(val_node.keys, val_node.values):
+                field = _resolve_key(k, consts)
+                if field in ("required", "optional"):
+                    if isinstance(v, (ast.List, ast.Tuple, ast.Set)):
+                        spec[field] = {
+                            e.value for e in v.elts
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, str)}
+                elif field == "open" and isinstance(v, ast.Constant):
+                    spec["open"] = bool(v.value)
+            schemas[rec_type] = spec
+        return schemas
+    return None
+
+
+class TraceSchemaRule(Rule):
+    """CON002: emitted trace-record key-sets match RECORD_SCHEMAS."""
+
+    id = "CON002"
+    name = "trace-record-schema"
+    description = ("TraceRecorder record literals must match the "
+                   "declared RECORD_SCHEMAS key-sets")
+    paths = (TRACE_MODULE,)
+
+    def check_file(self, ctx: FileContext,
+                   project: Project) -> Iterator[Finding]:
+        consts = _module_str_consts(ctx.tree)
+        schemas = _parse_schemas(ctx.tree, consts)
+        if schemas is None:
+            yield self.finding(
+                ctx, 1,
+                "faas/trace.py declares no RECORD_SCHEMAS — the golden "
+                "tests key on exact record key-sets; declare them")
+            return
+        funcs = [n for n in ast.walk(ctx.tree)
+                 if isinstance(n, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef))]
+        for fn in funcs:
+            yield from self._check_sink(ctx, fn, consts, schemas)
+
+    def _record_literals(self, fn: ast.AST, consts: Dict[str, str]
+                         ) -> Iterator[Tuple[str, Optional[str],
+                                             ast.Dict]]:
+        """(var name, record type, dict node) for each ``X = {...}`` or
+        ``self._append({...})`` whose literal carries a "type" key."""
+        for node in walk_scope(fn):
+            dict_node, var = None, None
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Dict)):
+                dict_node, var = node.value, node.targets[0].id
+            elif (isinstance(node, ast.Call) and node.args
+                    and isinstance(node.args[0], ast.Dict)):
+                dict_node, var = node.args[0], ""
+            if dict_node is None:
+                continue
+            rec_type = None
+            for k, v in zip(dict_node.keys, dict_node.values):
+                if _resolve_key(k, consts) == "type":
+                    rec_type = _resolve_key(v, consts)
+            if rec_type is not None:
+                yield var, rec_type, dict_node
+
+    def _check_sink(self, ctx: FileContext, fn: ast.AST,
+                    consts: Dict[str, str],
+                    schemas: Dict[str, dict]) -> Iterator[Finding]:
+        for var, rec_type, dict_node in self._record_literals(fn,
+                                                              consts):
+            spec = schemas.get(rec_type)
+            if spec is None:
+                yield self.finding(
+                    ctx, dict_node.lineno,
+                    f"record type {rec_type!r} is emitted but not "
+                    f"declared in RECORD_SCHEMAS")
+                continue
+            keys = {_resolve_key(k, consts)
+                    for k in dict_node.keys} - {None, "type"}
+            missing = spec["required"] - keys
+            extra = keys - spec["required"] - spec["optional"]
+            if missing:
+                yield self.finding(
+                    ctx, dict_node.lineno,
+                    f"{rec_type!r} record is missing declared required "
+                    f"keys: {sorted(missing)}")
+            if extra:
+                yield self.finding(
+                    ctx, dict_node.lineno,
+                    f"{rec_type!r} record writes undeclared keys "
+                    f"{sorted(extra)} — declare them in RECORD_SCHEMAS "
+                    f"(golden traces key on exact key-sets)")
+            if not var:
+                continue
+            # conditional writes after the literal: rec["k"] = ...
+            for node in walk_scope(fn):
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Subscript)
+                        and isinstance(node.targets[0].value, ast.Name)
+                        and node.targets[0].value.id == var):
+                    key = _resolve_key(node.targets[0].slice, consts)
+                    if (key is not None and key != "type"
+                            and key not in spec["required"]
+                            and key not in spec["optional"]):
+                        yield self.finding(
+                            ctx, node.lineno,
+                            f"{rec_type!r} record gains undeclared key "
+                            f"{key!r}; declare it as optional in "
+                            f"RECORD_SCHEMAS")
+                elif (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "update"
+                        and isinstance(node.func.value, ast.Name)
+                        and node.func.value.id == var
+                        and not spec["open"]):
+                    yield self.finding(
+                        ctx, node.lineno,
+                        f"{rec_type!r} record takes open **extra but "
+                        f"RECORD_SCHEMAS does not mark it open")
+
+
+RULES = (KernelOracleRule(), TraceSchemaRule())

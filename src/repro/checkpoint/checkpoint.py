@@ -6,7 +6,6 @@ tagged global models) and the pretraining driver.
 """
 from __future__ import annotations
 
-import json
 import re
 from pathlib import Path
 from typing import Any, Optional

@@ -21,7 +21,6 @@ Updates are JAX pytrees.  `aggregate` has two paths:
 """
 from __future__ import annotations
 
-import os
 from functools import partial
 from typing import Any, List, Optional, Sequence, Tuple
 
@@ -30,10 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from ..analysis import gates
+
 Pytree = Any
 
-# flip with REPRO_AGG_KERNEL=0 to force the tree_map reference path
-_KERNEL_DEFAULT = os.environ.get("REPRO_AGG_KERNEL", "1") != "0"
 _KERNEL_WARNED = False
 
 
@@ -219,7 +218,9 @@ def aggregate(updates: Sequence[ClientUpdate], coeffs: np.ndarray,
               use_kernel: Optional[bool] = None, mesh=None) -> Pytree:
     """Weighted sum Σ_k c_k · W_k over client updates."""
     if use_kernel is None:
-        use_kernel = _KERNEL_DEFAULT
+        # call-time read (REPRO_AGG_KERNEL=0 reverts to tree_map) so a
+        # per-test env flip reaches this default like every other gate
+        use_kernel = gates.agg_kernel_enabled()
     if use_kernel:
         try:
             return _aggregate_flat(updates, coeffs, mesh=mesh)

@@ -24,13 +24,14 @@ pre-compression builds.
 """
 from __future__ import annotations
 
-import os
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
+
+from ..analysis import gates
 
 Pytree = Any
 
@@ -70,8 +71,7 @@ class CompressionConfig:
     @property
     def active(self) -> bool:
         """True when encoding actually runs (scheme set + env not 0)."""
-        return (self.scheme != "none"
-                and os.environ.get("REPRO_COMPRESS", "1") != "0")
+        return self.scheme != "none" and gates.compress_enabled()
 
 
 class UpdateCompressor:

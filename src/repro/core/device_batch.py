@@ -26,11 +26,12 @@ per-client path (the kill switch mirrors ``REPRO_AGG_KERNEL``).
 """
 from __future__ import annotations
 
-import os
 from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
+
+from ..analysis import gates
 
 Pytree = Any
 
@@ -38,7 +39,7 @@ Pytree = Any
 def pipeline_enabled() -> bool:
     """The device-pipeline kill switch (checked at call time, so tests
     can flip it per-case)."""
-    return os.environ.get("REPRO_DEVICE_PIPELINE", "1") != "0"
+    return gates.device_pipeline_enabled()
 
 
 # ----------------------------------------------------------------------

@@ -39,7 +39,6 @@ output, so the diagnostic costs no extra pass over the model.
 """
 from __future__ import annotations
 
-import os
 from dataclasses import dataclass, replace
 from typing import Any, List, Optional, Sequence
 
@@ -48,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from ..analysis import gates
 from ..optim.optimizers import global_norm, zeros_like_f32
 from .aggregation import (ClientUpdate, aggregate, aggregate_reference,
                           flat_update_matrix)
@@ -113,7 +113,7 @@ class MergePipeline:
     def _kernel_enabled(self) -> bool:
         if self.use_kernel is not None:
             return self.use_kernel
-        return os.environ.get("REPRO_AGG_KERNEL", "1") != "0"
+        return gates.agg_kernel_enabled()
 
     # ------------------------------------------------------------------
     def merge(self, global_params: Optional[Pytree],

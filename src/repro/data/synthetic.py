@@ -11,7 +11,6 @@ partitioning protocols themselves (label-sorted shards etc.) are faithful
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
 
 import numpy as np
 

@@ -36,8 +36,9 @@ class PriceBook:
 
 
 def egress_cost(payload_bytes: int,
-                prices: PriceBook = PriceBook()) -> float:
+                prices: Optional[PriceBook] = None) -> float:
     """Cost of shipping one encoded client update to the server."""
+    prices = prices if prices is not None else PriceBook()
     return (payload_bytes / 2**30) * prices.egress_per_gib
 
 
@@ -65,7 +66,7 @@ class FunctionShape:
 
 
 def invocation_cost(duration_s: float, shape: FunctionShape,
-                    prices: PriceBook = PriceBook(),
+                    prices: Optional[PriceBook] = None,
                     allowance: Optional[FreeTierAllowance] = None) -> float:
     """Cost of one function invocation running for `duration_s` seconds.
 
@@ -73,6 +74,7 @@ def invocation_cost(duration_s: float, shape: FunctionShape,
     `prices.free_tier` and an `allowance`, the free-tier grant is drawn
     down first and only the excess is billed (the allowance is mutated).
     """
+    prices = prices if prices is not None else PriceBook()
     billed = max(0.1, -(-duration_s // 0.1) * 0.1)  # ceil to 100 ms
     gib = shape.memory_mb / 1024.0
     vcpu_s = billed * shape.vcpus
@@ -88,7 +90,7 @@ def invocation_cost(duration_s: float, shape: FunctionShape,
 
 
 def straggler_invocation_cost(round_duration_s: float, shape: FunctionShape,
-                              prices: PriceBook = PriceBook(),
+                              prices: Optional[PriceBook] = None,
                               allowance: Optional[FreeTierAllowance] = None
                               ) -> float:
     """Paper §VI-C: a straggler is charged as if it ran the whole round."""
@@ -104,16 +106,17 @@ class CostMeter:
     record per charge so the JSONL trace reconstructs `total` exactly.
     """
 
-    def __init__(self, shape: FunctionShape = FunctionShape(),
-                 prices: PriceBook = PriceBook(), trace=None):
-        self.shape = shape
-        self.prices = prices
+    def __init__(self, shape: Optional[FunctionShape] = None,
+                 prices: Optional[PriceBook] = None, trace=None):
+        self.shape = shape if shape is not None else FunctionShape()
+        self.prices = prices if prices is not None else PriceBook()
         self.trace = trace
         self.total = 0.0
         self.invocations = 0
         self.by_client: Dict[str, float] = {}
         self.rounds: Dict[int, float] = {}
-        self.allowance = FreeTierAllowance() if prices.free_tier else None
+        self.allowance = (FreeTierAllowance()
+                          if self.prices.free_tier else None)
 
     def _record(self, cost: float, duration_s: float, kind: str,
                 client_id: Optional[str], round_number) -> float:

@@ -24,7 +24,7 @@ wrapper (plan + outcome in one call) for direct platform tests.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 import numpy as np
@@ -159,11 +159,11 @@ class VirtualClock:
 class SimulatedFaaSPlatform:
     """One deployment target for client functions (e.g. 'GCF gen2')."""
 
-    def __init__(self, config: FaaSConfig = FaaSConfig(),
-                 shape: FunctionShape = FunctionShape(), seed: int = 0,
+    def __init__(self, config: Optional[FaaSConfig] = None,
+                 shape: Optional[FunctionShape] = None, seed: int = 0,
                  name: str = "sim", recorder=None):
-        self.config = config
-        self.shape = shape
+        self.config = config if config is not None else FaaSConfig()
+        self.shape = shape if shape is not None else FunctionShape()
         self.name = name
         self.rng = np.random.default_rng(seed)
         self._warm: Dict[str, WarmInstance] = {}

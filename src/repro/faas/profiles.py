@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Sequence
 
-from ..core.aggregation import ClientUpdate
 from .cost import FunctionShape, PriceBook
 from .fleet import PlatformFleet, RoutingPolicy
 from .invoker import ClientWorkFn, InvocationResult

@@ -51,6 +51,51 @@ REC_ROUTE = "route"
 REC_EVENT = "event"
 REC_SCHEDULING = "scheduling"
 
+# The declared key-set contract for every record type.  Golden trace
+# tests compare *bytes*, so the exact keys each sink emits are part of
+# the public surface: "required" keys appear in every record of that
+# type, "optional" keys only under documented conditions (compression
+# on, barrier-free round aliasing, ...), and "open" marks the two sinks
+# that accept **extra metadata (aggregation/scheduling payloads).
+# repro-lint's CON002 statically checks the sink literals below against
+# this table — extend the table and the golden fixtures together.
+RECORD_SCHEMAS = {
+    REC_ATTEMPT: {
+        "required": ["client_id", "platform", "round", "attempt",
+                     "start_time", "arrival_time", "cold",
+                     "cold_start_s", "billed_s", "status"],
+        "optional": ["payload_bytes", "ticket"],
+        "open": False,
+    },
+    REC_BILLING: {
+        "required": ["cost", "duration_s", "kind", "client_id",
+                     "round"],
+        "optional": [],
+        "open": False,
+    },
+    REC_AGGREGATION: {
+        "required": ["time", "round", "merged", "strategy", "mode"],
+        "optional": [],
+        "open": True,       # server_opt/update_norm/compression extras
+    },
+    REC_SCHEDULING: {
+        "required": ["time", "round", "scheduler", "mode", "want",
+                     "selected", "pool_size"],
+        "optional": [],
+        "open": True,       # per-scheduler payload (tiers, score stats)
+    },
+    REC_ROUTE: {
+        "required": ["client_id", "platform", "reason"],
+        "optional": [],
+        "open": False,
+    },
+    REC_EVENT: {
+        "required": ["time", "kind", "client_id", "round"],
+        "optional": [],
+        "open": False,
+    },
+}
+
 _UNSHARDED_ROOM = 1 << 62
 
 

@@ -130,7 +130,9 @@ class VectorizedExecutor:
                                            (xs, ys, ms), unroll=unroll)
             return params, jnp.mean(losses)
 
-        fn = jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0, 0)))
+        # memoized per mu in _jit_cache (guard at the top of _group_fn),
+        # so construction happens once per proximal setting, not per round
+        fn = jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0, 0)))  # repro-lint: disable=JAX003
         self._jit_cache[mu] = fn
         return fn
 

@@ -23,7 +23,7 @@ from ..faas.platform import ClientProfile, FaaSConfig, SimulatedFaaSPlatform
 from ..faas.trace import TraceRecorder
 from .client import ClientPool
 from .controller import Controller, ExperimentResult
-from .tasks import ClassificationTask, TaskConfig
+from .tasks import ClassificationTask
 
 
 @dataclass

@@ -12,7 +12,7 @@ cardinality (the paper's federated evaluation).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 

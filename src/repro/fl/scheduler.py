@@ -55,7 +55,7 @@ round-tagged checkpoint/resume path (fl/checkpointing.py).
 from __future__ import annotations
 
 import inspect
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 

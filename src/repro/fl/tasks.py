@@ -8,14 +8,13 @@ different data) — mirroring how FedLess ships one function image.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..data.loader import batches, num_batches
+from ..data.loader import batches
 from ..data.synthetic import ArrayDataset
 from ..models.small import ModelDef
 from ..optim import apply_updates, make_optimizer, proximal_grad

@@ -7,15 +7,16 @@ way with REPRO_PALLAS_INTERPRET=0/1 or the per-call `interpret` arg.
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..analysis import gates
 from .compress import int8_decode as _int8_decode
 from .compress import int8_encode as _int8_encode
-from .compress import topk_decode, topk_encode as _topk_encode
+from .compress import topk_decode as topk_decode  # noqa: F401 (re-export)
+from .compress import topk_encode as _topk_encode
 from .compress import topk_mask as _topk_mask
 from .fed_agg import fed_agg as _fed_agg
 from .fed_agg import fed_agg_apply as _fed_agg_apply
@@ -24,9 +25,11 @@ from .fed_agg import fed_agg_sharded as _fed_agg_sharded
 from .flash_attention import flash_attention as _flash_attention
 from .ssd_scan import ssd_scan as _ssd_scan
 
-_ENV = os.environ.get("REPRO_PALLAS_INTERPRET")
-INTERPRET = (jax.default_backend() == "cpu" if _ENV is None
-             else _ENV != "0")
+# read once at import (the compiled-call caches key on it); the
+# three-state override lives in the central gate registry
+_OVERRIDE = gates.pallas_interpret_override()
+INTERPRET = (jax.default_backend() == "cpu" if _OVERRIDE is None
+             else _OVERRIDE)
 
 
 def fed_agg(updates: jnp.ndarray, coeffs: jnp.ndarray,

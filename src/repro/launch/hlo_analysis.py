@@ -17,10 +17,9 @@ tensor bytes to wire bytes with ring-algorithm factors.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List
 
-import numpy as np
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12      # bf16

@@ -14,7 +14,6 @@ import argparse
 import json
 from pathlib import Path
 
-import numpy as np
 
 from ..data import (label_sorted_shards, make_char_lm,
                     make_image_classification, make_speech_commands)

@@ -179,7 +179,6 @@ def decode_self_attention(p: Pytree, x: jnp.ndarray, cache: Pytree,
     ring buffer of size `window` (keys are roped at absolute positions
     before caching, so the ring wrap is transparent).
     """
-    B = x.shape[0]
     S_cache = cache["k"].shape[2]
     q, k_new, v_new = _qkv(p, x)
     q = apply_rope(q, pos[:, None], cfg.rope_fraction, cfg.rope_theta)

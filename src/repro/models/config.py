@@ -18,7 +18,7 @@ weight-tied injections — Zamba semantics).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -185,7 +185,6 @@ def param_count(cfg: ArchConfig) -> int:
     """Analytic parameter count (for MODEL_FLOPS and sanity checks)."""
     D, F, V, hd = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.hd
     H, K = cfg.n_heads, cfg.n_kv_heads
-    per_block = {}
     attn = D * H * hd + 2 * D * K * hd + H * hd * D  # q, k, v, o
     mlp = 3 * D * F                                   # gated: wg, wu, wd
     moe = cfg.n_experts * 3 * D * F + D * cfg.n_experts

@@ -1,7 +1,7 @@
 """Shared neural layers: norms, gated MLP, RoPE, embeddings, init."""
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ Functional (init, apply) pairs; params are plain dict pytrees.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

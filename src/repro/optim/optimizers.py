@@ -9,8 +9,7 @@ which is the gradient of the paper's proximal term mu/2 ||w - w_global||^2.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

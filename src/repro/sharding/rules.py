@@ -19,13 +19,12 @@ and the roofline analysis (§Perf) is where bad choices get caught.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..models.config import ArchConfig
 
 Pytree = Any
 

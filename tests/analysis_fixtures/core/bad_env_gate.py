@@ -1,0 +1,6 @@
+"""GATE001 fixture: REPRO_* env access outside the gates registry."""
+import os
+
+FLAG = os.environ.get("REPRO_FIXTURE_FLAG", "0")    # line 4: GATE001
+MODE = os.environ["REPRO_FIXTURE_MODE"]             # line 5: GATE001
+OTHER = os.environ.get("UNRELATED_VAR", "")         # allowed: not REPRO_*

@@ -1,0 +1,5 @@
+"""DET003 fixture: builtin hash() used for seed derivation."""
+
+
+def client_seed(client_id):
+    return hash(client_id) % 2**32      # line 5: DET003

@@ -1,0 +1,11 @@
+"""DET001 fixture: draws from hidden global RNG streams."""
+import random
+
+import numpy as np
+
+
+def pick(ids):
+    winner = random.choice(ids)         # line 8: DET001 (stdlib global)
+    noise = np.random.rand(4)           # line 9: DET001 (numpy legacy)
+    rng = np.random.default_rng(0)      # allowed: explicit Generator
+    return winner, noise, rng.random()

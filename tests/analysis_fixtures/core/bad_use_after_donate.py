@@ -1,0 +1,21 @@
+"""JAX002 fixture: buffers read after being passed at donated slots."""
+import jax
+
+from repro.kernels import fed_agg
+
+_step = jax.jit(lambda s: s * 2.0, donate_argnums=(0,))
+
+
+def run(state):
+    new = _step(state)
+    return state.sum() + new            # line 11: JAX002 (jit twin)
+
+
+def merge(updates, coeffs):
+    out = fed_agg(updates, coeffs, donate=True)
+    return out + updates.mean()         # line 16: JAX002 (wrapper)
+
+
+def safe(state):
+    state = _step(state)                # reassignment kills the hazard
+    return state.sum()

@@ -1,0 +1,10 @@
+"""Pragma fixture: every violation suppressed on its own line."""
+import random
+
+
+def seed(cid):
+    return hash(cid)  # repro-lint: disable=DET003
+
+
+def jitter():
+    return random.random()  # repro-lint: disable=unseeded-random

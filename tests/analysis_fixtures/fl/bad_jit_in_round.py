@@ -1,0 +1,9 @@
+"""JAX003 fixture: jax.jit constructed inside a per-round call path."""
+import jax
+
+_STEP = jax.jit(lambda b: b)            # allowed: module scope
+
+
+def run_round(train_fn, batch):
+    step = jax.jit(train_fn)            # line 8: JAX003
+    return step(batch)

@@ -1,0 +1,7 @@
+"""CON001 fixture: one export with an oracle, one orphan."""
+
+__all__ = [
+    "good_kernel",                      # has good_kernel_ref in ref.py
+    "orphan_kernel",                    # line 5: CON001 (no oracle)
+    "ref",                              # excluded: the oracle module
+]

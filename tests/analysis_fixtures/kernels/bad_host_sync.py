@@ -1,0 +1,17 @@
+"""JAX001 fixture: host synchronization inside a jitted function."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    y = jnp.sum(x)
+    bad = float(y)                      # line 10: JAX001 (float)
+    arr = np.asarray(x)                 # line 11: JAX001 (np.asarray)
+    val = y.item()                      # line 12: JAX001 (.item)
+    return bad, arr, val
+
+
+def host_side(x):
+    return float(x)                     # allowed: not jitted

@@ -1,0 +1,5 @@
+"""Oracles for the CON001 fixture kernels."""
+
+
+def good_kernel_ref(x):
+    return x

@@ -1,7 +1,6 @@
 """Unit tests: staleness-aware aggregation (paper Eq. 3)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (ClientUpdate, UpdateStore, fedavg_aggregate,
                         staleness_aggregate, staleness_coefficients)

@@ -133,7 +133,7 @@ def test_error_feedback_telescopes_deterministic():
 
 
 def test_error_feedback_accumulation_property():
-    hypothesis = pytest.importorskip("hypothesis")
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=20, deadline=None)

@@ -1,6 +1,4 @@
 """Unit tests: client history / cooldown (paper Eq. 1, Alg. 1)."""
-import numpy as np
-import pytest
 
 from repro.core import ClientHistoryDB, ClientRecord
 

@@ -1,14 +1,12 @@
 """Tests for the FedLess-faithful extensions: running-average aggregation,
 multi-platform invocation, and the pretraining driver path."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (ClientUpdate, RunningAggregator,
                         staleness_aggregate)
-from repro.faas import (PLATFORM_PROFILES, ClientProfile,
-                        MultiPlatformInvoker, make_platform)
+from repro.faas import (PLATFORM_PROFILES, MultiPlatformInvoker,
+                        make_platform)
 
 
 def _upd(cid, value, n, rnd):

@@ -1,5 +1,4 @@
 """Unit tests: simulated FaaS platform semantics."""
-import numpy as np
 
 from repro.faas import (ClientProfile, FaaSConfig, SimulatedFaaSPlatform,
                         invocation_cost)

@@ -8,10 +8,8 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch.mesh import make_host_mesh
 from repro.sharding.flash_decode import (reference_decode_attention,

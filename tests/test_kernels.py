@@ -1,10 +1,15 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracles."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import fed_agg, flash_attention, ssd_scan
-from repro.kernels.ref import fed_agg_ref, flash_attention_ref, ssd_ref
+from repro.kernels import (APPLY_OPTS, fed_agg, fed_agg_apply,
+                           fed_agg_apply_sharded, fed_agg_sharded,
+                           flash_attention, ssd_scan, topk_mask)
+from repro.kernels.ref import (fed_agg_apply_ref, fed_agg_ref,
+                               flash_attention_ref, ssd_ref, topk_ref)
+from repro.launch.mesh import make_host_mesh
 
 RNG = np.random.default_rng(0)
 
@@ -30,6 +35,81 @@ def test_fed_agg_eq3_coefficients():
     u = jnp.stack([w, w, w])
     c = jnp.asarray([0.5, 0.3, 0.2])
     np.testing.assert_allclose(fed_agg(u, c), w, rtol=1e-5)
+
+
+# ------------------------------------------------------- fed_agg_apply
+@pytest.mark.parametrize("opt", APPLY_OPTS)
+@pytest.mark.parametrize("K,P", [(4, 1000), (7, 333)])
+def test_fed_agg_apply_matches_ref(opt, K, P):
+    u = jnp.asarray(RNG.normal(size=(K, P)), jnp.float32)
+    c = jnp.asarray(RNG.random(K), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    m = jnp.asarray(RNG.normal(size=(P,)) * 0.1, jnp.float32)
+    v = jnp.asarray(np.abs(RNG.normal(size=(P,))) * 0.1, jnp.float32)
+    args = (0.1, 0.8, 0.9, 0.99, 1e-3)          # lr, mix, b1, b2, eps
+    got = fed_agg_apply(u, c, g, m, v, *args, opt=opt, tile_p=512)
+    want = fed_agg_apply_ref(u, c, g, m, v, *args, opt=opt)
+    for got_x, want_x in zip(got, want):
+        np.testing.assert_allclose(np.asarray(got_x), np.asarray(want_x),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fed_agg_sharded_matches_ref():
+    """Mesh dispatch (P-dim shards) against the unsharded oracle."""
+    mesh = make_host_mesh()
+    K, P = 5, 777
+    u = jnp.asarray(RNG.normal(size=(K, P)), jnp.float32)
+    c = jnp.asarray(RNG.random(K), jnp.float32)
+    got = fed_agg_sharded(u, c, mesh, tile_p=256)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(fed_agg_ref(u, c)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("opt", ["sgd", "fedadam"])
+def test_fed_agg_apply_sharded_matches_ref(opt):
+    mesh = make_host_mesh()
+    K, P = 4, 513
+    u = jnp.asarray(RNG.normal(size=(K, P)), jnp.float32)
+    c = jnp.asarray(RNG.random(K), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    m = jnp.zeros((P,), jnp.float32)
+    v = jnp.zeros((P,), jnp.float32)
+    args = (0.05, 1.0, 0.9, 0.99, 1e-3)
+    got = fed_agg_apply_sharded(u, c, g, m, v, *args, opt=opt,
+                                mesh=mesh, tile_p=256)
+    want = fed_agg_apply_ref(u, c, g, m, v, *args, opt=opt)
+    for got_x, want_x in zip(got, want):
+        np.testing.assert_allclose(np.asarray(got_x), np.asarray(want_x),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- topk_mask
+@pytest.mark.parametrize("P,k", [(1000, 10), (333, 333), (4096, 41)])
+def test_topk_mask_matches_ref(P, k):
+    """The threshold-mask decode equals the top_k+scatter oracle,
+    including the lowest-index-wins tie-break."""
+    x = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    _, _, want = topk_ref(x, k)
+    mags, idx = jax.lax.top_k(jnp.abs(x), min(k, P))
+    tau = mags[min(k, P) - 1]
+    last_keep = jnp.max(jnp.where(mags == tau, idx, -1)).astype(jnp.int32)
+    got = topk_mask(x, tau, last_keep, tile_p=256)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+
+
+def test_topk_mask_tie_break():
+    """Equal magnitudes: the kernel must keep the lowest indices, exactly
+    like lax.top_k (the wire format the decode path reconstructs)."""
+    x = jnp.asarray([1.0, -1.0, 1.0, 0.5, -1.0, 0.25], jnp.float32)
+    k = 2
+    _, _, want = topk_ref(x, k)
+    mags, idx = jax.lax.top_k(jnp.abs(x), k)
+    tau = mags[k - 1]
+    last_keep = jnp.max(jnp.where(mags == tau, idx, -1)).astype(jnp.int32)
+    got = topk_mask(x, tau, last_keep, tile_p=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
 
 
 # ------------------------------------------------------------- attention

@@ -12,8 +12,7 @@ from repro.models.attention import (_ring_valid, decode_self_attention,
 from repro.models.config import ArchConfig
 from repro.models.layers import apply_rope, cross_entropy_loss, softcap
 from repro.models.moe import moe_block, moe_init, router_load
-from repro.models.ssm import (init_mamba_cache, mamba_block,
-                              mamba_decode_step, mamba_init)
+from repro.models.ssm import mamba_block, mamba_decode_step, mamba_init
 
 RNG = np.random.default_rng(0)
 

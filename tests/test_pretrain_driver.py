@@ -12,7 +12,7 @@ from repro.configs import get_config
 from repro.data.synthetic import make_token_lm
 from repro.launch.mesh import make_host_mesh
 from repro.models import make_train_step
-from repro.sharding import batch_specs, opt_specs, param_specs, to_named
+from repro.sharding import opt_specs, param_specs, to_named
 
 
 def test_pretrain_loss_decreases(tmp_path):

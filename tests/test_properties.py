@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (ClientHistoryDB, ClientRecord, ClientUpdate, ema,
                         missed_round_ema, select_clients,
                         staleness_aggregate, staleness_coefficients)
-from repro.core.clustering import calinski_harabasz, dbscan
+from repro.core.clustering import dbscan
 from repro.faas.cost import FunctionShape, invocation_cost
 
 SETTINGS = dict(max_examples=40, deadline=None)

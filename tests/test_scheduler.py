@@ -14,13 +14,12 @@ import pytest
 
 from repro.core import (ClientHistoryDB, ClientUpdate, StrategyConfig,
                         make_strategy, select_clients, select_random)
-from repro.faas import (ClientProfile, CostMeter, FaaSConfig, MockInvoker,
+from repro.faas import (CostMeter, FaaSConfig, MockInvoker,
                         SimulatedFaaSPlatform, TraceRecorder)
 from repro.fl.controller import TrainingDriver
 from repro.fl.scheduler import (SCHEDULERS, AdaptiveScheduler,
-                                ApodotikoScheduler, FedLesScanScheduler,
-                                RandomScheduler, RotationScheduler,
-                                make_scheduler)
+                                ApodotikoScheduler, RandomScheduler,
+                                RotationScheduler, make_scheduler)
 
 IDS = [f"c{i}" for i in range(8)]
 

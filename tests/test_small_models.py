@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data import (make_char_lm, make_image_classification,
                         make_speech_commands)

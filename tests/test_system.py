@@ -7,7 +7,6 @@ plus the HLO collective parser on a known program.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import INPUT_SHAPES, get_config
