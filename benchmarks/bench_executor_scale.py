@@ -1,0 +1,212 @@
+"""Cohort-sharded executor scaling — K × model scale × device count.
+
+Each cell times one bucketed cohort training dispatch
+(`VectorizedExecutor.run_group_batch` + block) for cohort size
+K ∈ {16, 64, 256} under a forced host device count N ∈ {1, 2, 8}
+(subprocess workers with ``XLA_FLAGS=--xla_force_host_platform_
+device_count=N``, since the device count is fixed at first jax init).
+N = 1 is the plain vmap path; N > 1 splits the cohort dim over the
+``("clients",)`` mesh via ``shard_map``.
+
+Two model scales:
+
+* **small CNN** — the paper's LEAF-style CNN at fc=16, one local epoch
+  over 20 samples per client (CI runs this half);
+* **gemma-scale shard** — a single 2048x2048 dense slab (~4.2M params,
+  one sharded-gemma tensor shard), so the cohort stack at K=256 is a
+  ~4.3 GB resident and the dispatch is memory-bandwidth-bound like a
+  real large-model cohort.  Tier-2: run with ``--model gemma``/``both``.
+
+Honesty caveat: forced host devices are *threads over the same
+physical cores*.  On hosts where ``os.cpu_count()`` is less than the
+forced device count (CI runners here have 1 core) the sharded cells
+measure partitioning overhead, not parallel speedup — expect
+``speedup_vs_1dev`` <= 1 there.  The JSON records ``host_cpu_count``
+next to every ratio so readers can tell which regime produced it;
+real >1 speedups need >= N cores or real accelerator devices.
+
+Results land in ``results/BENCH_executor_scale.json``.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_executor_scale``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+OUT = RESULTS / "BENCH_executor_scale.json"
+
+K_SWEEP = (16, 64, 256)
+DEVICE_COUNTS = (1, 2, 8)
+SAMPLES_PER_CLIENT = 20
+GEMMA_SHARD_DIM = 2048          # 2048x2048 dense slab ~= 4.2M params
+
+
+def _time_best(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ----------------------------------------------------------------------
+# worker: one (model, K) cell under this process's forced device count
+# ----------------------------------------------------------------------
+def _make_small_task():
+    from repro.fl.tasks import ClassificationTask, TaskConfig
+    from repro.models.small import make_cnn
+
+    model = make_cnn(14, 1, 5, 16, "bench_exec_cnn")
+    task = ClassificationTask(
+        model, TaskConfig(epochs=1, batch_size=10, per_sample_time_s=0.05))
+    return task, (14, 14, 1), 5
+
+
+def _make_gemma_shard_task():
+    """One gemma-scale tensor shard as a trainable 'model': a single
+    dense slab classified over its output dim, so the executor moves a
+    real large-model parameter volume per client."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fl.tasks import ClassificationTask, TaskConfig
+    from repro.models.small import ModelDef, _dense, _dense_init
+
+    d = GEMMA_SHARD_DIM
+
+    def init(rng):
+        return {"shard": _dense_init(rng, d, d)}
+
+    def apply(params, x):
+        return _dense(params["shard"], x)
+
+    model = ModelDef(init, apply, "bench_gemma_shard")
+    task = ClassificationTask(
+        model, TaskConfig(epochs=1, batch_size=2, per_sample_time_s=0.05))
+    del jax, jnp
+    return task, (d,), d
+
+
+def _cell_worker(model: str, k: int, reps: int) -> None:
+    import jax
+
+    from repro.data.synthetic import ArrayDataset
+    from repro.fl.executor import VectorizedExecutor
+    from repro.launch.mesh import make_clients_mesh
+
+    devices = len(jax.devices())
+    if model == "small":
+        task, sample_shape, n_classes = _make_small_task()
+        n = SAMPLES_PER_CLIENT
+    else:
+        task, sample_shape, n_classes = _make_gemma_shard_task()
+        n = 4                                # 2 steps of batch 2
+    rng = np.random.default_rng(0)
+    datasets = [ArrayDataset(
+        rng.normal(size=(n, *sample_shape)).astype(np.float32),
+        rng.integers(0, n_classes, size=n).astype(np.int32))
+        for _ in range(k)]
+    cids = [f"c{i}" for i in range(k)]
+    seeds = list(range(k))
+    params = task.init_params(0)
+
+    mesh = make_clients_mesh(devices) if devices > 1 else None
+    ex = VectorizedExecutor(task, mesh=mesh)
+
+    def dispatch():
+        batch = ex.run_group_batch(cids, datasets, params, 0.0, seeds)
+        jax.block_until_ready((batch.mat, batch._losses))
+
+    dispatch()                               # compile outside the timing
+    wall = _time_best(dispatch, reps)
+    print(json.dumps({"model": model, "k": k, "devices": devices,
+                      "wall_s": wall, "compiles": ex.compile_count}))
+
+
+# ----------------------------------------------------------------------
+# parent: subprocess per device count (XLA pins it at first import)
+# ----------------------------------------------------------------------
+def _run_cell(model: str, k: int, devices: int, reps: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_executor_scale",
+         "--cell-worker", model, str(k), str(reps)],
+        capture_output=True, text=True, env=env, check=True)
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _sweep(model: str, reps: int) -> dict:
+    cells: dict = {}
+    for k in K_SWEEP:
+        per_dev = {}
+        for n in DEVICE_COUNTS:
+            rec = _run_cell(model, k, n, reps)
+            per_dev[str(n)] = round(rec["wall_s"], 4)
+            print(f"{model:6s} K={k:3d} devices={n}: "
+                  f"{rec['wall_s']:.4f}s")
+        base = per_dev["1"]
+        cells[f"K={k}"] = {
+            "wall_s": per_dev,
+            "speedup_vs_1dev": {n: round(base / s, 3)
+                                for n, s in per_dev.items() if n != "1"},
+        }
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", choices=("small", "gemma", "both"),
+                    default="small")
+    ap.add_argument("--reps", type=int, default=2,
+                    help="timed repetitions per cell (best-of)")
+    ap.add_argument("--cell-worker", nargs=3,
+                    metavar=("MODEL", "K", "REPS"), help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.cell_worker:
+        _cell_worker(args.cell_worker[0], int(args.cell_worker[1]),
+                     int(args.cell_worker[2]))
+        return
+
+    grid: dict = {
+        "host_cpu_count": os.cpu_count(),
+        "device_counts": list(DEVICE_COUNTS),
+        "k_sweep": list(K_SWEEP),
+        "note": ("forced host devices are threads over the same physical "
+                 "cores; with host_cpu_count < devices the multi-device "
+                 "cells measure shard_map partitioning overhead, not "
+                 "parallel speedup — real speedups need >= N cores or "
+                 "accelerator devices"),
+        "models": {},
+    }
+    if args.model in ("small", "both"):
+        grid["models"]["small_cnn"] = {
+            "samples_per_client": SAMPLES_PER_CLIENT,
+            "cells": _sweep("small", args.reps),
+        }
+    if args.model in ("gemma", "both"):
+        grid["models"]["gemma_shard"] = {
+            "shard_dim": GEMMA_SHARD_DIM,
+            "param_count": GEMMA_SHARD_DIM * GEMMA_SHARD_DIM
+            + GEMMA_SHARD_DIM,
+            "cells": _sweep("gemma", max(1, args.reps - 1)),
+        }
+
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(grid, indent=1))
+    print(f"\nwrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

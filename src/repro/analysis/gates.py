@@ -25,6 +25,7 @@ from typing import Dict, Optional
 AGG_KERNEL = "REPRO_AGG_KERNEL"
 COMPRESS = "REPRO_COMPRESS"
 DEVICE_PIPELINE = "REPRO_DEVICE_PIPELINE"
+OVERLAP_DISPATCH = "REPRO_OVERLAP_DISPATCH"
 PALLAS_INTERPRET = "REPRO_PALLAS_INTERPRET"
 
 
@@ -50,6 +51,14 @@ GATES: Dict[str, Gate] = {g.name: g for g in (
          "handoff via DeviceUpdateBatch); 0 reverts every consumer to "
          "the legacy per-client materialize path "
          "(core/device_batch.py)."),
+    Gate(OVERLAP_DISPATCH, "1",
+         "Overlapped executor dispatch: the vectorized cohort training "
+         "launch is not blocked on — results flow back as async "
+         "DeviceUpdateBatch handles while event/trace/billing "
+         "bookkeeping proceeds; 0 blocks until the device compute "
+         "finishes before the round's events run (fl/executor.py). "
+         "Byte-inert either way: virtual time never reads the wall "
+         "clock."),
     Gate(PALLAS_INTERPRET, None,
          "Pallas interpret-mode override: 1 forces the interpreter, 0 "
          "forces Mosaic lowering; unset picks interpret on CPU and "
@@ -84,6 +93,10 @@ def compress_enabled() -> bool:
 
 def device_pipeline_enabled() -> bool:
     return enabled(DEVICE_PIPELINE)
+
+
+def overlap_dispatch_enabled() -> bool:
+    return enabled(OVERLAP_DISPATCH)
 
 
 def pallas_interpret_override() -> Optional[bool]:

@@ -19,6 +19,11 @@ from ..core import (FileContext, Finding, Project, Rule, call_name,
 # the env-gate registry module — the single place REPRO_* may be read
 GATES_RELPATH = "analysis/gates.py"
 
+# the mesh-axis vocabulary module — MESH_AXES is the declared set of
+# axis names every mesh in the repo may use (JAX004 reads it by AST, so
+# the lint engine never imports jax)
+AXIS_RULES_RELPATH = "sharding/rules.py"
+
 # wrapper entry points that donate caller buffers when donate=True;
 # positions are the donated *positional* argument slots (mirrors
 # donate_argnums on the jit twins in kernels/fed_agg.py)
@@ -287,6 +292,122 @@ class JitInRoundPathRule(Rule):
                         f"pragma with the cache justification")
 
 
+# collectives whose axis-name argument must come from the declared
+# vocabulary; shard_map is handled separately (axis names live in its
+# in_specs/out_specs PartitionSpecs)
+_COLLECTIVE_CALLS = {
+    "jax.lax.psum", "lax.psum", "psum",
+    "jax.lax.pmean", "lax.pmean", "pmean",
+    "jax.lax.pmax", "lax.pmax", "pmax",
+    "jax.lax.pmin", "lax.pmin", "pmin",
+    "jax.lax.all_gather", "lax.all_gather", "all_gather",
+    "jax.lax.ppermute", "lax.ppermute", "ppermute",
+    "jax.lax.axis_index", "lax.axis_index", "axis_index",
+}
+
+_SHARD_MAP_CALLS = {"shard_map", "jax.experimental.shard_map.shard_map",
+                    "shd.shard_map"}
+
+
+class UndeclaredMeshAxisRule(Rule):
+    """JAX004: a mesh-axis literal outside the declared vocabulary.
+
+    Every mesh this repo builds (launch/mesh.py) names its axes from
+    ``sharding/rules.MESH_AXES``.  A ``shard_map`` spec or a collective
+    (``psum``/``all_gather``/...) naming an axis *not* in that tuple is
+    either a typo or a mesh the sharing rules (merge_spec, cohort_spec,
+    batch_specs) know nothing about — both fail only at run time, on a
+    multi-device host the CI tier may never provision.  Axis names that
+    arrive through variables are out of scope (they were resolved from
+    the declared constants already).
+    """
+
+    id = "JAX004"
+    name = "undeclared-mesh-axis"
+    description = ("shard_map/psum axis literal not declared in "
+                   "sharding/rules.py MESH_AXES")
+
+    def _declared_axes(self, project: Project) -> Set[str]:
+        """AST-parse MESH_AXES from the project's sharding/rules.py:
+        string elements directly, Name elements resolved against the
+        module's own string-constant assignments (CLIENT_AXIS)."""
+        for f in project.files:
+            if not f.relpath.endswith(AXIS_RULES_RELPATH):
+                continue
+            consts: Dict[str, str] = {}
+            for node in ast.walk(f.tree):
+                if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and isinstance(node.value, ast.Constant)
+                        and isinstance(node.value.value, str)):
+                    consts[node.targets[0].id] = node.value.value
+            axes: Set[str] = set()
+            for node in ast.walk(f.tree):
+                target, value = None, None
+                if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)):
+                    target, value = node.targets[0].id, node.value
+                elif (isinstance(node, ast.AnnAssign)
+                        and isinstance(node.target, ast.Name)):
+                    target, value = node.target.id, node.value
+                if target != "MESH_AXES" or not isinstance(
+                        value, (ast.Tuple, ast.List)):
+                    continue
+                for e in value.elts:
+                    if (isinstance(e, ast.Constant)
+                            and isinstance(e.value, str)):
+                        axes.add(e.value)
+                    elif isinstance(e, ast.Name) and e.id in consts:
+                        axes.add(consts[e.id])
+            return axes
+        return set()
+
+    @staticmethod
+    def _axis_literals(expr: ast.AST) -> Iterator[ast.Constant]:
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                yield sub
+
+    def _candidate_exprs(self, node: ast.Call) -> List[ast.AST]:
+        """The expressions of this call that carry axis names."""
+        dotted = call_name(node)
+        if dotted in _SHARD_MAP_CALLS:
+            exprs = [kw.value for kw in node.keywords
+                     if kw.arg in ("in_specs", "out_specs")]
+            # positional form: shard_map(f, mesh, in_specs, out_specs)
+            exprs.extend(node.args[2:4])
+            return exprs
+        if dotted in _COLLECTIVE_CALLS:
+            exprs = [kw.value for kw in node.keywords
+                     if kw.arg == "axis_name"]
+            pos = 0 if dotted.endswith("axis_index") else 1
+            if len(node.args) > pos:
+                exprs.append(node.args[pos])
+            return exprs
+        return []
+
+    def check_file(self, ctx: FileContext,
+                   project: Project) -> Iterator[Finding]:
+        if ctx.relpath.endswith(AXIS_RULES_RELPATH):
+            return              # the vocabulary itself
+        declared = self._declared_axes(project)
+        seen: Set[Tuple[int, str]] = set()
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for expr in self._candidate_exprs(node):
+                for lit in self._axis_literals(expr):
+                    axis = lit.value
+                    if axis in declared or (lit.lineno, axis) in seen:
+                        continue
+                    seen.add((lit.lineno, axis))
+                    yield self.finding(
+                        ctx, lit.lineno,
+                        f"mesh axis {axis!r} is not declared in "
+                        f"sharding/rules.py MESH_AXES; add it to the "
+                        f"vocabulary (or use the declared constant)")
+
+
 class EnvGateRegistryRule(Rule):
     """GATE001: ``REPRO_*`` env access outside ``analysis/gates.py``.
 
@@ -335,4 +456,4 @@ class EnvGateRegistryRule(Rule):
 
 
 RULES = (HostSyncInJitRule(), UseAfterDonateRule(), JitInRoundPathRule(),
-         EnvGateRegistryRule())
+         UndeclaredMeshAxisRule(), EnvGateRegistryRule())

@@ -111,6 +111,11 @@ class _RoundState:
         self.inflight: Dict[str, Tuple[InvocationPlan,
                                        Optional[ClientUpdate], list]] = {}
         self.work: Dict[str, tuple] = {}         # cid -> (update, nominal_s)
+        # deferred batch work: a thunk producing work-cache entries, run
+        # when the round's first INVOKE_START fires (not at open_round) —
+        # the overlapped-dispatch hook.  Never checkpointed: open_round
+        # and the first event land in the same controller turn.
+        self.work_provider: Optional[Callable[[], Optional[Dict[str, tuple]]]] = None
         self.retrying: set = set()               # retry fired, not restarted
         self.done: set = set()
         self.closed = False
@@ -149,6 +154,11 @@ class InvocationEngine:
         cached = st.work.get(cid)
         payload = (cached[0].payload_bytes
                    if cached is not None and cached[0] is not None else None)
+        # dispatch_s is wall-clock launch telemetry stamped by the
+        # executor when timing collection is on — like payload_bytes it
+        # is only-when-set, so dense/default traces stay byte-identical
+        dispatch = (cached[0].dispatch_s
+                    if cached is not None and cached[0] is not None else None)
         # the platform captured at _start time: platform_of() may be a
         # *mutating* routing call (TelemetryRoutingPolicy can re-route),
         # so it must not be re-resolved as a side effect of logging
@@ -158,18 +168,30 @@ class InvocationEngine:
             start_time=plan.start_time, arrival_time=arrival_time,
             cold=plan.cold, cold_start_s=plan.cold_start_s,
             billed_s=outcome.duration_s, status=status,
-            payload_bytes=payload)
+            payload_bytes=payload, dispatch_s=dispatch)
 
     # ------------------------------------------------------------------
     def open_round(self, queue: EventQueue, client_ids: Sequence[str],
                    global_params: Pytree, round_number: int,
                    start_time: float,
-                   precomputed: Optional[Dict[str, tuple]] = None) -> None:
+                   precomputed: Optional[Dict[str, tuple]] = None,
+                   work_provider: Optional[
+                       Callable[[], Optional[Dict[str, tuple]]]] = None
+                   ) -> None:
         """Schedule the round's invocations; at most `max_concurrency` are
-        in flight at once, the rest start as earlier ones resolve."""
+        in flight at once, the rest start as earlier ones resolve.
+
+        ``precomputed`` seeds the work cache eagerly; ``work_provider``
+        defers the same batch to the round's first INVOKE_START — with
+        overlapped dispatch the provider *launches* the executor's async
+        group dispatch and returns unready handles, so the rest of the
+        round's event bookkeeping runs while the devices train.  Both
+        fire at the same virtual time with identical client order, so
+        the two paths are trace-byte-identical."""
         st = _RoundState(round_number, client_ids, global_params)
         if precomputed:
             st.work.update(precomputed)
+        st.work_provider = work_provider
         self._rounds[round_number] = st
         cap = self.max_concurrency or len(st.client_ids)
         for cid in st.client_ids[:cap]:
@@ -211,6 +233,12 @@ class InvocationEngine:
         if st is None or st.closed:
             return      # round closed between scheduling and firing
         cid = event.client_id
+        if st.work_provider is not None:
+            # consume exactly once, before any per-client work_fn can run
+            provider, st.work_provider = st.work_provider, None
+            produced = provider()
+            if produced:
+                st.work.update(produced)
         st.retrying.discard(cid)
         profile = self.invoker.profiles.get(cid, ClientProfile())
         platform = self.invoker.platform_of(cid)

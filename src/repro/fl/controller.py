@@ -374,10 +374,17 @@ class TrainingDriver:
                                           self.strategy.last_plan)
         self._record_scheduling(t0, round_number, want, selected,
                                 len(self.pool.client_ids))
-        precomputed = self._precompute_updates(selected, global_params,
-                                               round_number)
-        self.engine.open_round(self.queue, selected, global_params,
-                               round_number, t0, precomputed=precomputed)
+        # deferred, not eager: the engine runs the provider when the
+        # round's first INVOKE_START fires — with overlapped dispatch
+        # (REPRO_OVERLAP_DISPATCH, default on) the vmapped executor
+        # launch returns unready device handles and the round's event /
+        # trace / billing bookkeeping overlaps the device compute.  Same
+        # virtual time, same client order → traces stay byte-identical
+        # to the eager precompute.
+        self.engine.open_round(
+            self.queue, selected, global_params, round_number, t0,
+            work_provider=lambda: self._precompute_updates(
+                selected, global_params, round_number))
         deadline_ev = self.queue.schedule(deadline, EventKind.ROUND_DEADLINE,
                                           round_number=round_number)
 

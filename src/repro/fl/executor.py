@@ -31,19 +31,44 @@ per-client pytrees and host loss scalars are materialized lazily.  The
 flatten is a *separate* dispatch from the training jit on purpose: XLA
 never gets the chance to rearrange training math around it, so enabling
 the pipeline cannot perturb training numerics.
+
+Multi-device (``mesh``): given a 1-axis ``("clients",)`` mesh
+(`launch.mesh.make_clients_mesh`), the same vmapped scan runs under
+``shard_map`` with the cohort (K) dim split across the mesh — each
+device trains its slice of the bucket (per-client Adam states live on
+the owning device because ``optimizer.init`` runs *inside* the mapped
+body), and the (K, P) flatten inherits the row sharding, composing with
+the P-sharded merge (`kernels/fed_agg.fed_agg_apply_sharded`) so a round
+never funnels through one device.  A ``None`` or size-1 mesh takes the
+*identical* single-device vmap code path — bitwise-inert by
+construction, not by tolerance.
+
+Overlapped dispatch (``REPRO_OVERLAP_DISPATCH``, default on): the group
+dispatch is launched but not blocked on — JAX's async dispatch returns
+unready device arrays, so event-engine bookkeeping, trace IO, and
+scheduler `propose` for the round overlap device compute; the only host
+syncs left are the existing single batched loss fetch and the merge
+read-back.  ``0`` blocks right here until the trained stack is ready.
+Virtual time never reads the wall clock, so traces are byte-identical
+either way.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
 from jax.flatten_util import ravel_pytree
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..analysis import gates
 from ..core.device_batch import DeviceUpdateBatch, pipeline_enabled
 from ..optim import apply_updates, proximal_grad
+from ..sharding.rules import cohort_spec
 
 Pytree = Any
 
@@ -73,33 +98,83 @@ def _batch_indices(n: int, batch_size: int, epochs: int,
     return idx, mask.reshape(epochs * per_epoch, batch_size)
 
 
-def _bucket(k: int) -> int:
-    """Next power of two ≥ k — the vmap width the kernel is compiled for."""
-    return 1 << (k - 1).bit_length() if k > 1 else 1
+def _bucket(k: int, multiple: int = 1) -> int:
+    """Next power of two ≥ k, rounded up to a ``multiple`` (the mesh
+    device count) so the cohort dim always divides the ``clients`` axis.
+    With ``multiple=1`` this is exactly the historical bucket."""
+    b = 1 << (k - 1).bit_length() if k > 1 else 1
+    if multiple > 1 and b % multiple:
+        b = -(-b // multiple) * multiple
+    return b
+
+
+def _normalize_mesh(mesh):
+    """A missing or size-1 mesh is *no* mesh: the executor falls back to
+    the plain vmap path, keeping single-device runs bitwise-identical."""
+    if mesh is None or int(mesh.size) <= 1:
+        return None
+    return mesh
 
 
 class VectorizedExecutor:
     """Runs the local epochs of a group of clients as one vmapped scan."""
 
-    def __init__(self, task):
+    def __init__(self, task, mesh=None):
         self.task = task
-        self._jit_cache: Dict[float, Any] = {}   # mu -> compiled group fn
+        self.mesh = _normalize_mesh(mesh)
+        # (mu, mesh key) -> compiled group fn: a mesh change must never
+        # reuse a function traced for a different device layout
+        self._jit_cache: Dict[tuple, Any] = {}
         # stacked-tree → (K, P) ravel-layout flatten; its own dispatch so
         # the training jit's numerics are untouched by the pipeline
         self._flatten = jax.jit(self._flatten_stacked)
         self._unravel_cache: Dict[Any, Callable] = {}
         # recompile accounting: one entry per distinct dispatch signature
-        # (mu + bucketed operand shapes).  compile_count going flat across
-        # rounds is the "compilation is a non-event" invariant the round-
-        # pipeline tests assert.
+        # (mu + mesh shape + bucketed operand shapes).  compile_count
+        # going flat across rounds is the "compilation is a non-event"
+        # invariant the round-pipeline tests assert — tracked *per mesh*,
+        # so switching device counts registers as new compiles instead of
+        # silently reusing a stale bucket.
         self._dispatch_keys: set = set()
-        self.compile_count = 0
+        self._compile_counts: Dict[Any, int] = {}
+        # telemetry (wall-clock, never fed back into virtual time): when
+        # enabled, each group dispatch's launch latency is recorded and
+        # stamped onto the packaged ClientUpdates as ``dispatch_s``
+        self.collect_timing = False
+        self.last_dispatch_s: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def configure_mesh(self, mesh) -> None:
+        """Point subsequent dispatches at ``mesh`` (size-1 → vmap path).
+
+        Compiled functions and dispatch keys are retained per mesh, so
+        flipping back restores the previously compiled executables."""
+        self.mesh = _normalize_mesh(mesh)
+
+    def _mesh_key(self) -> Optional[tuple]:
+        """Hashable mesh identity for jit-cache / compile accounting."""
+        if self.mesh is None:
+            return None
+        return tuple(self.mesh.shape.items())
+
+    @property
+    def compile_count(self) -> int:
+        """Compile count for the *current* mesh — the per-mesh invariant
+        tests assert flat across rounds (a mesh switch starts its own
+        counter instead of inflating this one)."""
+        return self._compile_counts.get(self._mesh_key(), 0)
+
+    @property
+    def compile_count_total(self) -> int:
+        """Cumulative compiles across every mesh this executor has used."""
+        return sum(self._compile_counts.values())
 
     # ------------------------------------------------------------------
     def _group_fn(self, mu: float):
         """vmap-over-clients of scan-over-steps local training."""
-        if mu in self._jit_cache:
-            return self._jit_cache[mu]
+        cache_key = (mu, self._mesh_key())
+        if cache_key in self._jit_cache:
+            return self._jit_cache[cache_key]
         task = self.task
         optimizer = task.optimizer
 
@@ -130,10 +205,21 @@ class VectorizedExecutor:
                                            (xs, ys, ms), unroll=unroll)
             return params, jnp.mean(losses)
 
-        # memoized per mu in _jit_cache (guard at the top of _group_fn),
-        # so construction happens once per proximal setting, not per round
-        fn = jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0, 0)))  # repro-lint: disable=JAX003
-        self._jit_cache[mu] = fn
+        cohort = jax.vmap(one_client, in_axes=(None, 0, 0, 0))
+        if self.mesh is not None:
+            # split the cohort (K) dim over the 'clients' axis: each
+            # device vmaps its own slice, Adam states included (built by
+            # optimizer.init inside the mapped body, so they never exist
+            # unsharded); global params replicate.  check_rep=False —
+            # the replicated-input analysis chokes on the scan carry.
+            spec = cohort_spec()
+            cohort = shard_map(cohort, mesh=self.mesh,
+                               in_specs=(P(), spec, spec, spec),
+                               out_specs=(spec, spec), check_rep=False)
+        # memoized per (mu, mesh) in _jit_cache (guard at the top), so
+        # construction happens once per setting, not per round
+        fn = jax.jit(cohort)  # repro-lint: disable=JAX003
+        self._jit_cache[cache_key] = fn
         return fn
 
     # ------------------------------------------------------------------
@@ -161,11 +247,19 @@ class VectorizedExecutor:
             self._unravel_cache[key] = un
         return un
 
+    def _place(self, arr: np.ndarray) -> jnp.ndarray:
+        """Stage one stacked operand on device; with a mesh, pre-shard
+        the K dim so the shard_map dispatch never reshards inputs."""
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        return jax.device_put(arr, NamedSharding(self.mesh, cohort_spec()))
+
     def _train_group(self, cids: Sequence[str], datasets,
                      global_params: Pytree, mu: float,
                      seeds: Sequence[int]) -> Tuple[Pytree, jnp.ndarray]:
         """One bucketed vmap dispatch: (stacked out_params, losses) with
-        K padded to the power-of-two bucket (rows ≥ len(cids) are pads)."""
+        K padded to the power-of-two bucket (rows ≥ len(cids) are pads;
+        on a mesh the bucket also rounds up to the device count)."""
         cfg = self.task.config
         xs, ys, ms = [], [], []
         for cid, ds, seed in zip(cids, datasets, seeds):
@@ -176,17 +270,21 @@ class VectorizedExecutor:
             ys.append(ds.y[idx])
             ms.append(mask)
         xs, ys, ms = np.stack(xs), np.stack(ys), np.stack(ms)
-        pad = _bucket(len(cids)) - len(cids)
+        devices = int(self.mesh.size) if self.mesh is not None else 1
+        pad = _bucket(len(cids), devices) - len(cids)
         if pad:
             xs = np.concatenate([xs, np.repeat(xs[-1:], pad, axis=0)])
             ys = np.concatenate([ys, np.repeat(ys[-1:], pad, axis=0)])
             ms = np.concatenate([ms, np.repeat(ms[-1:], pad, axis=0)])
-        key = (mu, xs.shape, str(xs.dtype), ys.shape, str(ys.dtype))
+        mesh_key = self._mesh_key()
+        key = (mu, mesh_key, xs.shape, str(xs.dtype), ys.shape,
+               str(ys.dtype))
         if key not in self._dispatch_keys:
             self._dispatch_keys.add(key)
-            self.compile_count += 1
+            self._compile_counts[mesh_key] = \
+                self._compile_counts.get(mesh_key, 0) + 1
         return self._group_fn(mu)(
-            global_params, jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(ms))
+            global_params, self._place(xs), self._place(ys), self._place(ms))
 
     def run_group(self, cids: Sequence[str], datasets, global_params: Pytree,
                   mu: float, seeds: Sequence[int]
@@ -209,7 +307,8 @@ class VectorizedExecutor:
         """Device-pipeline twin of `run_group`: the trained stack is
         flattened on device into the (K_bucket, P) ravel-layout matrix
         and returned as a DeviceUpdateBatch — nothing crosses to the
-        host until a consumer materializes a row."""
+        host until a consumer materializes a row.  On a mesh the matrix
+        rows stay sharded over 'clients', ready for the sharded merge."""
         out_params, losses = self._train_group(cids, datasets, global_params,
                                                mu, seeds)
         return DeviceUpdateBatch(self._flatten(out_params), cids,
@@ -231,7 +330,7 @@ class VectorizedExecutor:
         """Compile the train (and flatten) dispatches for the bucket
         shapes `cids` would use, without touching any round state — no
         packaging, no compressor residuals, results discarded.  Returns
-        the executor's cumulative compile count."""
+        the executor's compile count for the current mesh."""
         for group_cids in self._group(pool, cids).values():
             datasets = [pool.clients[c].dataset for c in group_cids]
             seeds = [pool.client_seed(c, round_number) for c in group_cids]
@@ -248,26 +347,37 @@ class VectorizedExecutor:
 
         Pipeline on: each group's updates stay on device as one
         DeviceUpdateBatch and the packaged ClientUpdates are thin row
-        views.  Pipeline off (``REPRO_DEVICE_PIPELINE=0``): the legacy
-        per-client materialize → package path."""
+        views — and unless ``REPRO_OVERLAP_DISPATCH=0`` the dispatch is
+        *not* blocked on, so the caller's bookkeeping overlaps device
+        compute.  Pipeline off (``REPRO_DEVICE_PIPELINE=0``): the legacy
+        per-client materialize → package path (inherently synchronous)."""
         results: Dict[str, tuple] = {}
+        overlap = gates.overlap_dispatch_enabled()
         for group_cids in self._group(pool, cids).values():
             datasets = [pool.clients[c].dataset for c in group_cids]
             seeds = [pool.client_seed(c, round_number) for c in group_cids]
+            # wall-clock telemetry only — never folded into virtual time
+            t0 = (time.perf_counter()  # repro-lint: disable=DET002
+                  if self.collect_timing else None)
             if pipeline_enabled():
                 batch = self.run_group_batch(group_cids, datasets,
                                              global_params,
                                              pool.proximal_mu, seeds)
+                if not overlap:
+                    jax.block_until_ready((batch.mat, batch._losses))
+                dispatch_s = self._lap(t0)
                 for i, cid in enumerate(group_cids):
                     ds = pool.clients[cid].dataset
                     update = pool.package_update(cid, None, round_number,
                                                  global_params,
                                                  batch=batch, row=i)
+                    update.dispatch_s = dispatch_s
                     results[cid] = (update,
                                     self.task.nominal_work_seconds(ds))
                 continue
             trained = self.run_group(group_cids, datasets, global_params,
                                      pool.proximal_mu, seeds)
+            dispatch_s = self._lap(t0)
             for cid in group_cids:
                 params, _loss = trained[cid]
                 ds = pool.clients[cid].dataset
@@ -275,6 +385,15 @@ class VectorizedExecutor:
                 # (same hook as the eager work_fn path)
                 update = pool.package_update(cid, params, round_number,
                                              global_params)
+                update.dispatch_s = dispatch_s
                 results[cid] = (update,
                                 self.task.nominal_work_seconds(ds))
         return results
+
+    def _lap(self, t0: Optional[float]) -> Optional[float]:
+        """Elapsed wall seconds since ``t0`` when timing is on."""
+        if t0 is None:
+            return None
+        self.last_dispatch_s = \
+            time.perf_counter() - t0  # repro-lint: disable=DET002
+        return self.last_dispatch_s

@@ -110,6 +110,18 @@ class ExperimentConfig:
     # over this many host devices (0/1 → single-device; >1 requires
     # XLA_FLAGS=--xla_force_host_platform_device_count≥N or real devices)
     merge_devices: int = 0
+    # cohort-sharded executor: split the vectorized executor's K (cohort)
+    # dim over this many devices on a 1-axis ("clients",) mesh
+    # (launch/mesh.make_clients_mesh).  0/1 → the plain single-device
+    # vmap path, bitwise-identical to pre-mesh builds; >1 requires
+    # forced host devices or real accelerators and composes with
+    # merge_devices so a round never funnels through one device.  Only
+    # meaningful when `vectorized` resolves on.
+    executor_devices: int = 0
+    # stamp each executor group dispatch's wall-clock launch latency onto
+    # its ClientUpdates / attempt trace records as `dispatch_s`
+    # (only-when-set: default traces stay byte-identical)
+    dispatch_timing: bool = False
     # round-pipeline compilation surface (launch/compile_cache.py):
     # a directory enables JAX's persistent compilation cache, so repeat
     # runs (and CI) skip XLA compiles entirely; executor_warmup runs one
@@ -203,6 +215,19 @@ def run_experiment(task: ClassificationTask,
     if vectorized is None:
         import jax
         vectorized = jax.default_backend() != "cpu"
+    if vectorized:
+        # the executor is cached on the task (shared across experiment
+        # grids), so both knobs are set unconditionally — a later run
+        # with defaults must not inherit a previous run's mesh/timing
+        from ..launch.mesh import make_clients_mesh
+        mesh = (make_clients_mesh(config.executor_devices)
+                if config.executor_devices and config.executor_devices > 1
+                else None)
+        # shard the cohort dim over a 1-axis ("clients",) mesh; clamps to
+        # the devices that exist (a size-1 mesh falls back to the
+        # identical single-device vmap path)
+        pool.executor.configure_mesh(mesh)
+        pool.executor.collect_timing = bool(config.dispatch_timing)
 
     scheduler = None
     if config.scheduler is not None:

@@ -33,6 +33,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ..sharding.rules import merge_axes
+
 # optimizer families the fused apply kernel can lower; "sgd"/"fedavgm"
 # share the heavy-ball branch (momentum 0 reduces to plain server-SGD)
 APPLY_OPTS = ("sgd", "fedavgm", "fedadagrad", "fedadam", "fedyogi")
@@ -255,7 +257,7 @@ def fed_agg_sharded(updates: jnp.ndarray, coeffs: jnp.ndarray, mesh,
     output gathers back to a dense (P,).  Zero padding up to the device
     count is numerically inert (0·c contributes 0).
     """
-    axes = tuple(mesh.shape.keys())
+    axes = merge_axes(mesh)
     n = int(mesh.size)
     if n <= 1:
         return fed_agg(updates, coeffs, tile_p=tile_p, interpret=interpret)
@@ -283,7 +285,7 @@ def fed_agg_apply_sharded(updates: jnp.ndarray, coeffs: jnp.ndarray,
     keep params/moments/Δ at exact 0 (see the kernel docstring), so the
     sharded result matches the single-device merge to fp32 tolerance.
     """
-    axes = tuple(mesh.shape.keys())
+    axes = merge_axes(mesh)
     n = int(mesh.size)
     if n <= 1:
         return fed_agg_apply(updates, coeffs, params, m, v,

@@ -28,6 +28,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Pytree = Any
 
+# The declared mesh-axis vocabulary.  Every mesh this repo constructs
+# (launch/mesh.py) names its axes from this tuple, and repro-lint's
+# JAX004 rule flags shard_map / psum call sites whose *literal* axis
+# names are not declared here — an undeclared axis is either a typo or
+# a mesh the rest of the stack (merge_spec, cohort_spec, batch_specs)
+# knows nothing about.
+#   pod / data / model : the production FSDP+TP mesh (make_production_mesh)
+#   clients            : the FL cohort (K) axis the vectorized executor
+#                        shards local training over (fl/executor.py)
+CLIENT_AXIS = "clients"
+MESH_AXES: Tuple[str, ...] = ("pod", "data", "model", CLIENT_AXIS)
+
 
 @dataclass(frozen=True)
 class ShardingOptions:
@@ -82,6 +94,14 @@ def merge_spec(mesh: Mesh) -> P:
     if not axes:
         return P()
     return P(axes if len(axes) > 1 else axes[0])
+
+
+def cohort_spec() -> P:
+    """PartitionSpec splitting a leading cohort (K) dim over the
+    ``clients`` axis — per-client training stacks, Adam states and the
+    executor's (K, P) update matrix all shard with this prefix spec
+    (fl/executor.py)."""
+    return P(CLIENT_AXIS)
 
 
 def _pick_spec(shape: Sequence[int], mesh: Mesh,

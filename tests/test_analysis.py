@@ -37,6 +37,8 @@ EXPECTED = {
     ("JAX002", "core/bad_use_after_donate.py", 11),
     ("JAX002", "core/bad_use_after_donate.py", 16),
     ("JAX003", "fl/bad_jit_in_round.py", 8),
+    ("JAX004", "kernels/bad_shard_axes.py", 10),
+    ("JAX004", "kernels/bad_shard_axes.py", 16),
     ("GATE001", "core/bad_env_gate.py", 4),
     ("GATE001", "core/bad_env_gate.py", 5),
     ("CON001", "kernels/__init__.py", 5),
@@ -183,7 +185,7 @@ def test_select_rules_rejects_unknown():
 # ------------------------------------------------------------ gates
 def test_gates_registry_declares_known_flags():
     for name in (gates.AGG_KERNEL, gates.COMPRESS, gates.DEVICE_PIPELINE,
-                 gates.PALLAS_INTERPRET):
+                 gates.OVERLAP_DISPATCH, gates.PALLAS_INTERPRET):
         assert name in gates.GATES
         assert gates.GATES[name].doc
 
